@@ -1,0 +1,37 @@
+"""Shared helpers for the benchmark suite.
+
+Every benchmark returns rows (name, us_per_call, derived, note):
+  us_per_call - wall time of the measured unit (schedule gen + simulate)
+  derived     - the paper's metric: completion time normalized to the
+                fault-free optimum T0 (NCCL_NoFailure), or as noted.
+"""
+from __future__ import annotations
+
+import time
+
+from repro.core import (BandwidthProfile, optcc_schedule,
+                        ring_allreduce_schedule, simulate)
+from repro.core import lower_bounds as lb
+from repro.core.baselines import r2ccl_time
+
+
+def sim_optcc(profile, n, k, **kw):
+    t0 = time.perf_counter()
+    sched = optcc_schedule(profile, n, k, **kw)
+    t = simulate(sched).makespan
+    return t, time.perf_counter() - t0
+
+
+def sim_ring(profile, n):
+    t0 = time.perf_counter()
+    t = simulate(ring_allreduce_schedule(profile, n)).makespan
+    return t, time.perf_counter() - t0
+
+
+def row(name, wall_s, derived, note=""):
+    return (name, wall_s * 1e6, derived, note)
+
+
+def emit(rows):
+    for name, us, derived, note in rows:
+        print(f"{name},{us:.1f},{derived:.6g}{',' + note if note else ''}")

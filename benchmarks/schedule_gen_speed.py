@@ -1,0 +1,33 @@
+"""Section 4.3 claim: closed-form schedule generation, <1 ms at p=1024.
+
+Measures (a) the O(pk) slot-descriptor path the claim refers to, and
+(b) full Flow-graph materialization (the simulator's input; O(p^2 k)).
+Derived = wall milliseconds.
+"""
+from __future__ import annotations
+
+import time
+
+from repro.core import BandwidthProfile, make_plan
+from benchmarks.common import row
+
+
+def run():
+    rows = []
+    for p in (64, 256, 1024):
+        prof = BandwidthProfile.single_straggler(p, 1.5)
+        n = (p - 1) * 4 * 16
+        t0 = time.perf_counter()
+        for _ in range(5):
+            make_plan(prof, n, k=4, materialize=False)
+        dt = (time.perf_counter() - t0) / 5
+        rows.append(row(f"schedgen_descriptor_p{p}", dt, dt * 1e3,
+                        "paper: <1ms at p=1024"))
+    for p in (64, 256):
+        prof = BandwidthProfile.single_straggler(p, 1.5)
+        n = (p - 1) * 4 * 16
+        t0 = time.perf_counter()
+        make_plan(prof, n, k=4, materialize=True)
+        dt = time.perf_counter() - t0
+        rows.append(row(f"schedgen_flows_p{p}", dt, dt * 1e3))
+    return rows

@@ -1,0 +1,37 @@
+"""Table 1 / Appendix A: lower-bound table + paper headline numbers.
+
+Derived values:
+  * LB overhead (LB/T0) across the three settings and both regimes;
+  * the abstract's claims: <1% unavoidable overhead at p=128 for l<=2;
+    R2CCL's 57% overhead at 50% bandwidth loss (p=8).
+"""
+from __future__ import annotations
+
+from repro.core import lower_bounds as lb
+from repro.core.baselines import r2ccl_time
+from benchmarks.common import row
+
+
+def run():
+    rows = []
+    n = 1.0
+    for p in (16, 128):
+        t0 = lb.t0_fault_free(p, n)
+        for ell in (1.5, 2.0, 3.0):
+            rows.append(row(f"table1_single_p{p}_l{ell}", 0.0,
+                            lb.lb_single_straggler_tight(p, n, ell) / t0))
+        rows.append(row(f"table1_multi_p{p}_l21.5", 0.0,
+                        lb.lb_multi_straggler(p, n, [2.0, 1.5]) / t0))
+        g = 4
+        t0g = lb.t0_fault_free(p * g, n, g)
+        rows.append(row(f"table1_gpu4_p{p * g}_l2", 0.0,
+                        lb.lb_multi_gpu_tight(p * g, n, 2.0, g) / t0g))
+    # headline claims
+    over128 = lb.lb_single_straggler_tight(128, n, 2.0) / \
+        lb.t0_fault_free(128, n) - 1.0
+    rows.append(row("claim_lb_overhead_p128_l2", 0.0, over128,
+                    "paper: <1%"))
+    r2_over = r2ccl_time(8, n, 2.0) / lb.t0_fault_free(8, n) - 1.0
+    rows.append(row("claim_r2ccl_overhead_p8_l2", 0.0, r2_over,
+                    "paper: up to 57%"))
+    return rows

@@ -1,0 +1,38 @@
+"""End-to-end LM training with a mid-run network failure.
+
+Trains a reduced qwen3-family model on the synthetic pipeline for a few
+hundred steps; at --fail-at a NIC degradation is injected (the failure
+detector fires), the OptCC planner rebuilds the gradient-sync collective
+online, and training continues without a restart; at --repair-at the link
+heals and the native psum path returns. Checkpoints are written
+periodically and the run auto-resumes from the latest one.
+
+    PYTHONPATH=src python examples/train_lm.py               # ~5 min CPU
+    PYTHONPATH=src python examples/train_lm.py --steps 400 \
+        --fail-at 150 --repair-at 300
+
+Run it on 8 virtual devices to see a real multi-member DP ring:
+    XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+        PYTHONPATH=src python examples/train_lm.py
+"""
+import sys
+
+sys.path.insert(0, "src")
+
+from repro.launch.train import main as train_main
+
+
+if __name__ == "__main__":
+    argv = sys.argv[1:]
+    defaults = ["--arch", "qwen3-1.7b", "--smoke", "--steps", "200",
+                "--fail-at", "60", "--repair-at", "140",
+                "--ckpt-dir", "/tmp/repro_ckpt", "--ckpt-every", "50"]
+    # user-supplied flags win over defaults
+    seen = {a for a in argv if a.startswith("--")}
+    final = list(argv)
+    i = 0
+    while i < len(defaults):
+        if defaults[i] not in seen:
+            final.extend(defaults[i:i + 2])
+        i += 2
+    train_main(final)

@@ -1,0 +1,13 @@
+from repro.comms.collectives import (compressed_psum, dequantize_int8,
+                                     hierarchical_psum, optcc_allreduce,
+                                     optcc_allreduce_tree, quantize_int8,
+                                     ring_all_gather, ring_allreduce,
+                                     ring_reduce_scatter)
+from repro.comms.fault import FailureInjector, FaultAwareSync, FaultState
+
+__all__ = [
+    "ring_reduce_scatter", "ring_all_gather", "ring_allreduce",
+    "optcc_allreduce", "optcc_allreduce_tree", "hierarchical_psum",
+    "quantize_int8", "dequantize_int8", "compressed_psum",
+    "FaultState", "FailureInjector", "FaultAwareSync",
+]

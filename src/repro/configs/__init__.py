@@ -1,0 +1,56 @@
+"""Config registry: get_config(arch_id, smoke=False) for the 10 assigned
+architectures (plus shape-cell definitions shared by dryrun/benchmarks)."""
+from __future__ import annotations
+
+import dataclasses
+import importlib
+
+from repro.configs.base import ModelConfig
+
+_MODULES = {
+    "qwen3-1.7b": "qwen3_1p7b",
+    "gemma3-27b": "gemma3_27b",
+    "minicpm-2b": "minicpm_2b",
+    "internlm2-1.8b": "internlm2_1p8b",
+    "rwkv6-7b": "rwkv6_7b",
+    "arctic-480b": "arctic_480b",
+    "phi3.5-moe-42b-a6.6b": "phi35_moe",
+    "hymba-1.5b": "hymba_1p5b",
+    "whisper-base": "whisper_base",
+    "qwen2-vl-2b": "qwen2_vl_2b",
+}
+
+ARCH_IDS = tuple(_MODULES)
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeCell:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str            # "train" | "prefill" | "decode"
+
+
+SHAPES = (
+    ShapeCell("train_4k", 4096, 256, "train"),
+    ShapeCell("prefill_32k", 32768, 32, "prefill"),
+    ShapeCell("decode_32k", 32768, 128, "decode"),
+    ShapeCell("long_500k", 524288, 1, "decode"),
+)
+
+# long_500k needs sub-quadratic attention / bounded state; skip for pure
+# full-attention archs (see DESIGN.md "Shape-cell skips").
+LONG_CONTEXT_ARCHS = ("rwkv6-7b", "hymba-1.5b", "gemma3-27b")
+
+
+def cell_is_applicable(arch: str, shape: ShapeCell) -> tuple[bool, str]:
+    if shape.name == "long_500k" and arch not in LONG_CONTEXT_ARCHS:
+        return False, "pure full-attention arch: 512k decode skipped"
+    return True, ""
+
+
+def get_config(arch: str, smoke: bool = False) -> ModelConfig:
+    if arch not in _MODULES:
+        raise KeyError(f"unknown arch {arch!r}; known: {list(_MODULES)}")
+    mod = importlib.import_module(f"repro.configs.{_MODULES[arch]}")
+    return mod.SMOKE if smoke else mod.FULL

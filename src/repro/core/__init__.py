@@ -1,0 +1,31 @@
+"""OptCC core: the paper's contribution as a reusable library.
+
+Public API:
+  BandwidthProfile, Flow, Op, Schedule       - flow model (core.model)
+  simulate, SimResult                        - bandwidth simulator
+  execute, verify_allreduce                  - data-level verification
+  ring_allreduce_schedule                    - NCCL ring / ICCL baseline
+  optcc_schedule                             - OptCC (all three settings)
+  make_plan, Plan                            - online planner
+  lower_bounds                               - Theorems 1,2,3,6,13 + times
+"""
+from repro.core import lower_bounds
+from repro.core.baselines import (iccl_time_asymptotic, iccl_time_simulated,
+                                  nccl_no_failure_time, r2ccl_time)
+from repro.core.executor import execute, verify_allreduce
+from repro.core.model import BandwidthProfile, Flow, Op, Schedule
+from repro.core.planner import Plan, make_plan
+from repro.core.ring import ring_allreduce_schedule
+from repro.core.schedule import (optcc_multi_gpu_schedule,
+                                 optcc_multi_schedule, optcc_schedule,
+                                 optcc_single_schedule)
+from repro.core.simulator import SimResult, simulate
+
+__all__ = [
+    "BandwidthProfile", "Flow", "Op", "Schedule", "SimResult", "simulate",
+    "execute", "verify_allreduce", "ring_allreduce_schedule",
+    "optcc_schedule", "optcc_single_schedule", "optcc_multi_schedule",
+    "optcc_multi_gpu_schedule", "make_plan", "Plan", "lower_bounds",
+    "nccl_no_failure_time", "iccl_time_asymptotic", "iccl_time_simulated",
+    "r2ccl_time",
+]

@@ -1,0 +1,157 @@
+"""Closed-form lower bounds and achieved-time formulas from the paper.
+
+All times are in *element-time units* of the bandwidth-bound model: a healthy
+NIC moves one element per unit time. Multiply by (bytes_per_element /
+nic_bytes_per_second) to get seconds.
+
+Naming follows the paper:
+  p  - total number of GPUs
+  n  - vector length in elements
+  l  - slowdown factor(s), l >= 1
+  g  - GPUs per server (q = p/g servers)
+  k  - number of pipeline segments
+  m  - number of stragglers
+"""
+from __future__ import annotations
+
+from typing import Sequence
+
+
+# ----------------------------------------------------------------------------
+# Fault-free optimum (Patarasuk & Yuan)
+# ----------------------------------------------------------------------------
+
+def t0_fault_free(p: int, n: float, g: int = 1) -> float:
+    """T0 = 2(p-1) n / (g p): bandwidth-optimal homogeneous AllReduce."""
+    return 2.0 * (p - 1) * n / (g * p)
+
+
+# ----------------------------------------------------------------------------
+# Lower bounds
+# ----------------------------------------------------------------------------
+
+def lb_single_straggler(p: int, n: float, ell: float) -> float:
+    """Theorem 1: T >= max{ 2*l*(p-1) / (l*(p-1)+1), l } * n."""
+    if ell < 1.0:
+        raise ValueError("ell >= 1 required")
+    return max(2.0 * ell * (p - 1) / (ell * (p - 1) + 1.0), ell) * n
+
+
+def lb_single_straggler_tight(p: int, n: float, ell: float) -> float:
+    """Theorem 6 (tight): T >= max{ 2*l*(p-1) / (l*(p-2)+2), l } * n."""
+    if ell < 1.0:
+        raise ValueError("ell >= 1 required")
+    return max(2.0 * ell * (p - 1) / (ell * (p - 2) + 2.0), ell) * n
+
+
+def lb_multi_straggler(p: int, n: float, ells: Sequence[float]) -> float:
+    """Theorem 2: T >= max{ 2(p-1) / (p-m+Sum 1/l_i), l_1 } * n."""
+    m = len(ells)
+    if m == 0:
+        return t0_fault_free(p, n)
+    ell1 = max(ells)
+    y0 = 2.0 * (p - 1) / (p - m + sum(1.0 / l for l in ells))
+    return max(y0, ell1) * n
+
+
+def lb_multi_gpu(p: int, n: float, ell: float, g: int) -> float:
+    """Theorem 3: T >= (n/g) * max{ 2*l*(q-1)/(1+l*(q-1)), l }, q = p/g."""
+    q = p // g
+    return (n / g) * max(2.0 * ell * (q - 1) / (1.0 + ell * (q - 1)), ell)
+
+
+def lb_multi_gpu_tight(p: int, n: float, ell: float, g: int) -> float:
+    """Theorem 13 (tight): T >= (n/g) * max{ 2*l*(q-1)/(l*(q-2)+2), l }."""
+    q = p // g
+    return (n / g) * max(2.0 * ell * (q - 1) / (ell * (q - 2) + 2.0), ell)
+
+
+def lower_bound(p: int, n: float, ells: Sequence[float], g: int = 1) -> float:
+    """Dispatch to the tightest applicable bound for a bandwidth profile."""
+    stragglers = [l for l in ells if l > 1.0]
+    if not stragglers:
+        return t0_fault_free(p, n, g)
+    if g > 1:
+        if len(stragglers) != 1:
+            raise NotImplementedError("multi-straggler multi-GPU bound not in paper")
+        return lb_multi_gpu_tight(p, n, stragglers[0], g)
+    if len(stragglers) == 1:
+        return lb_single_straggler_tight(p, n, stragglers[0])
+    return lb_multi_straggler(p, n, stragglers)
+
+
+# ----------------------------------------------------------------------------
+# Achieved-time closed forms for OptCC (Section 4.3, Appendices C, D.3, E.4)
+# ----------------------------------------------------------------------------
+
+def optcc_time_single(p: int, n: float, ell: float, k: int) -> float:
+    """Single straggler, g=1.
+
+    l >= 2 (Eq. 1):  T = l * n * (k+1)/k
+    l <  2 (Eq. 2, bubble filling):
+        T = 2(p-1) l n / ((p-2) l + 2) * (k + l - 1)/k
+    """
+    if ell >= 2.0:
+        return ell * n * (k + 1.0) / k
+    return (2.0 * (p - 1) * ell * n / ((p - 2) * ell + 2.0)) * (k + ell - 1.0) / k
+
+
+def optcc_time_multi(p: int, n: float, ells: Sequence[float], k: int) -> float:
+    """m stragglers, g=1 (Appendix D.3).
+
+    T_body = max{ 2(p-1) s, (l1 (p-m) + 2(m-1)) s },  s = n/(k (p-m)),
+    T = (k+4) * T_body.
+    """
+    m = len(ells)
+    ell1 = max(ells) if ells else 1.0
+    s = n / (k * (p - m))
+    t_body = max(2.0 * (p - 1) * s, (ell1 * (p - m) + 2.0 * (m - 1)) * s)
+    return (k + 4.0) * t_body
+
+
+def optcc_time_multi_gpu(p: int, n: float, ell: float, g: int, k: int) -> float:
+    """Single straggler, g GPUs/server (Appendix E.4; no bubble filling).
+
+    l >= 2: T <= l(q-1) s (k+5.5),  s = n/(g k (q-1))  ->  l n/g
+    l <  2: T <= 2(q-1) s (k+5.5)                      ->  2 n/g
+    """
+    q = p // g
+    s = n / (g * k * (q - 1))
+    body = max(ell, 2.0) * (q - 1) * s
+    return body * (k + 5.5)
+
+
+def optcc_time(p: int, n: float, ells: Sequence[float], k: int,
+               g: int = 1) -> float:
+    stragglers = [l for l in ells if l > 1.0]
+    if not stragglers:
+        return t0_fault_free(p, n, g) * (k + 1.0) / k  # pipelined ring
+    if g > 1:
+        if len(stragglers) != 1:
+            raise NotImplementedError
+        return optcc_time_multi_gpu(p, n, stragglers[0], g, k)
+    if len(stragglers) == 1:
+        return optcc_time_single(p, n, stragglers[0], k)
+    return optcc_time_multi(p, n, stragglers, k)
+
+
+# ----------------------------------------------------------------------------
+# Asymptotic (k -> inf) versions, for benchmark plots
+# ----------------------------------------------------------------------------
+
+def optcc_time_asymptotic(p: int, n: float, ells: Sequence[float],
+                          g: int = 1) -> float:
+    stragglers = [l for l in ells if l > 1.0]
+    if not stragglers:
+        return t0_fault_free(p, n, g)
+    if g > 1:
+        (ell,) = stragglers
+        return (n / g) * max(ell, 2.0)
+    if len(stragglers) == 1:
+        (ell,) = stragglers
+        if ell >= 2.0:
+            return ell * n
+        return 2.0 * (p - 1) * ell * n / ((p - 2) * ell + 2.0)
+    m = len(stragglers)
+    ell1 = max(stragglers)
+    return max(2.0 * (p - 1) / (p - m), ell1 + 2.0 * (m - 1) / (p - m)) * n

@@ -1,0 +1,171 @@
+"""Data model for the bandwidth-bound flow abstraction of the paper.
+
+A *flow* is a point-to-point transfer of `size` elements from `src` to `dst`
+(Section 4.1). The bandwidth-bound model (Section 3, "Problem setting"):
+
+  - a healthy NIC transmits one element per time unit;
+  - a NIC with slowdown factor l > 1 takes l time units per element;
+  - each NIC port (send side / recv side) carries at most one flow at a time;
+  - per-message latency and cold-start terms are excluded.
+
+A flow's duration is `size * max(l_src, l_dst)`: the slower endpoint throttles
+the transfer (the paper's Stage-2/3 flows take l*s even though one endpoint is
+healthy).
+
+Flows carry semantic *tags* so that a single schedule object can be both
+timed (core.simulator) and executed on real data (core.executor).
+"""
+from __future__ import annotations
+
+import dataclasses
+import enum
+from typing import Optional, Sequence
+
+
+class Op(enum.Enum):
+    """What the receiver does with an incoming flow's payload.
+
+    Sender semantics are uniform: a flow sends ``bufs[src][key]`` if that
+    buffer exists, else the sender's raw input slice ``x[src][lo:hi]``
+    (chain starts / ordering-B straggler uploads).
+    """
+
+    # bufs[dst][key] = (bufs[dst][key] if present else x[dst][lo:hi]) + payload
+    # Init-once-with-own-contribution + order-independent accumulation: this
+    # single primitive expresses ring reduce-scatter hops, straggler uploads,
+    # multi-straggler owner combines, NVLink collects and star reduces.
+    ACCUM = "accum"
+    # out[dst][lo:hi] = payload; bufs[dst][key] = payload (store & forward:
+    # allgather hops, straggler downloads, NVLink distributes).
+    STORE = "store"
+
+
+@dataclasses.dataclass(frozen=True)
+class Flow:
+    """One point-to-point transfer.
+
+    Attributes:
+      fid: unique id (also the priority: lower fid = earlier in schedule order).
+      src/dst: GPU ranks.
+      size: number of elements (float allowed; fractional sections appear in
+        bubble filling where s' is generally non-integral in element-time units).
+      deps: fids that must complete before this flow may start.
+      lo/hi: element range [lo, hi) of the vector this flow carries.
+      op: receiver semantics (see Op).
+      key: opaque tuple used by the executor to name partial-sum buffers.
+      pri: planned start time in the paper's slotted timeline (Figures 5-6).
+        The simulator uses it as the dispatch priority (work-conserving: a
+        flow may still start early if ports are free). None -> fid order.
+    """
+
+    fid: int
+    src: int
+    dst: int
+    size: float
+    deps: tuple[int, ...]
+    lo: float = 0.0
+    hi: float = 0.0
+    op: Op = Op.STORE
+    key: tuple = ()
+    pri: Optional[float] = None
+    release: float = 0.0   # hard earliest-start time (slotted schedules)
+    # Extra payload parts packed into the same wire transfer (Appendix C:
+    # bubble filling *enlarges* Stage-2/3 flows to carry the P2P star chunk).
+    # Each entry is (lo, hi, op, key); `size` covers main + extras.
+    extra: tuple = ()
+
+    @property
+    def priority(self) -> tuple[float, int]:
+        return (self.pri if self.pri is not None else float(self.fid),
+                self.fid)
+
+
+@dataclasses.dataclass(frozen=True)
+class BandwidthProfile:
+    """Per-rank NIC slowdown factors. slowdown[i] == 1.0 means healthy.
+
+    For the multi-GPU/server setting, `gpus_per_server` > 1 and ranks are
+    grouped server-major: server j owns ranks [j*g, (j+1)*g). NVLink rate is
+    (g-1)x the NIC rate per the paper's provisioning assumption.
+    """
+
+    p: int
+    slowdown: tuple[float, ...]
+    gpus_per_server: int = 1
+    # NVLink per-direction bandwidth as a multiple of one NIC. None ->
+    # the paper's provisioning assumption (g-1)x, the *minimum* that hides
+    # intra-server traffic. Real hardware has more headroom (DGX A100:
+    # 2400 Gbps NVLink vs 200 Gbps NIC = 12x; paper footnote 4).
+    nvlink_mult: float | None = None
+
+    @property
+    def nvlink_rate(self) -> float:
+        if self.nvlink_mult is not None:
+            return self.nvlink_mult
+        return max(self.gpus_per_server - 1, 1)
+
+    def __post_init__(self):
+        if len(self.slowdown) != self.p:
+            raise ValueError(f"slowdown must have length p={self.p}")
+        if any(l < 1.0 for l in self.slowdown):
+            raise ValueError("slowdown factors must be >= 1")
+        if self.p % self.gpus_per_server:
+            raise ValueError("p must be divisible by gpus_per_server")
+
+    @classmethod
+    def healthy(cls, p: int, g: int = 1) -> "BandwidthProfile":
+        return cls(p=p, slowdown=(1.0,) * p, gpus_per_server=g)
+
+    @classmethod
+    def single_straggler(cls, p: int, ell: float, straggler: int = 0,
+                         g: int = 1) -> "BandwidthProfile":
+        sl = [1.0] * p
+        if g == 1:
+            sl[straggler] = ell
+        else:
+            # straggler is a *server* index; all its GPUs' NICs degrade (PXN).
+            for r in range(straggler * g, (straggler + 1) * g):
+                sl[r] = ell
+        return cls(p=p, slowdown=tuple(sl), gpus_per_server=g)
+
+    @classmethod
+    def multi_straggler(cls, p: int, ells: Sequence[float],
+                        stragglers: Optional[Sequence[int]] = None
+                        ) -> "BandwidthProfile":
+        if stragglers is None:
+            stragglers = list(range(len(ells)))
+        sl = [1.0] * p
+        for r, l in zip(stragglers, ells):
+            sl[r] = l
+        return cls(p=p, slowdown=tuple(sl))
+
+    @property
+    def stragglers(self) -> tuple[int, ...]:
+        return tuple(i for i, l in enumerate(self.slowdown) if l > 1.0)
+
+    @property
+    def max_ell(self) -> float:
+        return max(self.slowdown)
+
+    @property
+    def num_servers(self) -> int:
+        return self.p // self.gpus_per_server
+
+
+@dataclasses.dataclass
+class Schedule:
+    """A complete flow schedule plus NVLink flows (multi-GPU setting).
+
+    nic_flows are timed against NIC ports; nvlink_flows against per-GPU
+    NVLink ports at rate (g-1)x NIC speed. For g == 1, nvlink_flows is empty.
+    """
+
+    profile: BandwidthProfile
+    n: float                      # total vector length (elements)
+    nic_flows: list[Flow]
+    nvlink_flows: list[Flow] = dataclasses.field(default_factory=list)
+    meta: dict = dataclasses.field(default_factory=dict)
+
+    @property
+    def num_flows(self) -> int:
+        return len(self.nic_flows) + len(self.nvlink_flows)

@@ -1,0 +1,96 @@
+"""Online re-planning: bandwidth profile -> collective plan.
+
+When the runtime's failure detector reports a degradation event (NIC loss,
+rerouted ICI link, DCN egress fault), the planner picks the schedule for the
+new bandwidth profile. Generation is closed-form (O(p k), Section 4.3) - no
+solver - so this happens inline at failure-detection time; the paper reports
+< 1 ms for p=1024 and benchmarks/schedule_gen_speed.py measures ours.
+
+The plan also carries the theory: the lower bound for the profile and the
+predicted completion time, so the runtime can (a) sanity-check the simulator
+against the theory and (b) expose expected-overhead metrics to operators.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+
+from repro.core import lower_bounds as lb
+from repro.core.model import BandwidthProfile, Schedule
+from repro.core.schedule import optcc_schedule
+
+
+@dataclasses.dataclass
+class Plan:
+    profile: BandwidthProfile
+    schedule: Schedule | None    # None when materialize=False
+    algo: str                    # "ring" (healthy) or "optcc-*"
+    lower_bound: float           # element-time units
+    predicted_time: float        # closed-form achieved time
+    t0: float                    # fault-free optimum
+    gen_seconds: float           # wall time to construct the plan
+    descriptor: dict = dataclasses.field(default_factory=dict)
+
+    @property
+    def predicted_overhead(self) -> float:
+        """Predicted slowdown vs the fault-free optimum (1.0 = none)."""
+        return self.predicted_time / self.t0 if self.t0 else float("inf")
+
+
+def plan_descriptor(profile: BandwidthProfile, n: int, k: int) -> dict:
+    """O(p k) closed-form schedule descriptor (Section 4.3's complexity
+    claim): per-(segment, section) slot offsets; the per-hop flow graph is
+    implied by the closed-form chain rules and only materialized when the
+    runtime (or simulator) needs individual flows."""
+    p = profile.p
+    stragglers = profile.stragglers
+    ell = max(profile.slowdown)
+    ph = p - max(len(stragglers), 1) if stragglers else p
+    s_i = n / max(k * ph, 1)
+    w = max(ell, 2.0)
+    body = w * ph * s_i
+    slots = {}
+    for m in range(k):
+        for j in range(ph):
+            nu = (j + m) % ph
+            slots[(m, j)] = (
+                nu,                                   # owner index
+                m * body + (2 * nu + ph) * s_i,       # S1 chain start
+                (m + 2) * body + 2 * nu * s_i - 2,    # S2 slot
+                (m + 3) * body + 2 * nu * s_i - 4,    # S3 slot
+                (m + 3) * body + (2 * nu + 2 * ph - 3) * s_i,  # S4 start
+            )
+    return {"algo": "optcc" if stragglers else "ring", "k": k,
+            "body": body, "slots": slots}
+
+
+def make_plan(profile: BandwidthProfile, n: int, k: int = 16,
+              fill_bubbles: bool = True, materialize: bool = True) -> Plan:
+    t_start = time.perf_counter()
+    descriptor = plan_descriptor(profile, n, k)
+    schedule = optcc_schedule(profile, n, k, fill_bubbles) if materialize \
+        else None
+    gen_s = time.perf_counter() - t_start
+    g = profile.gpus_per_server
+    ells = [l for l in profile.slowdown if l > 1.0]
+    # De-duplicate per-server slowdowns in the multi-GPU case.
+    if g > 1 and ells:
+        ells = [max(ells)]
+    if schedule is not None:
+        algo = schedule.meta["algo"]
+    elif not profile.stragglers:
+        algo = "ring"
+    elif g > 1:
+        algo = "optcc-multigpu"
+    else:
+        algo = "optcc-single" if len(ells) == 1 else "optcc-multi"
+    return Plan(
+        profile=profile,
+        schedule=schedule,
+        algo=algo,
+        lower_bound=lb.lower_bound(profile.p, n, ells, g),
+        predicted_time=lb.optcc_time(profile.p, n, ells, k, g),
+        t0=lb.t0_fault_free(profile.p, n, g),
+        gen_seconds=gen_s,
+        descriptor=descriptor,
+    )

@@ -1,0 +1,186 @@
+"""Deterministic discrete-event simulator for the bandwidth-bound flow model.
+
+This is our stand-in for SimAI (the paper's NS-3-based simulator), restricted
+to exactly the model in which the paper's theory lives (Section 3):
+
+  * each rank has one NIC with a send port and a recv port; each port carries
+    at most one flow at a time (the paper's non-overlap constraint, 4.1);
+  * a NIC flow src->dst of `size` elements takes size * max(l_src, l_dst)
+    time units (the slow endpoint throttles the wire);
+  * NVLink flows (multi-GPU/server setting) use separate per-rank NVLink
+    send/recv ports at (g-1)x the NIC rate and are never degraded;
+  * flows start as soon as (a) all declared dependencies have completed and
+    (b) both ports are free; among competing ready flows, the lower fid wins
+    (fid encodes the schedule's priority order).
+
+The same run always produces the same result (no randomness), matching the
+paper's "SimAI is deterministic" setup.
+"""
+from __future__ import annotations
+
+import heapq
+from dataclasses import dataclass
+
+from repro.core.model import BandwidthProfile, Flow, Schedule
+
+
+@dataclass
+class SimResult:
+    makespan: float
+    start: dict[int, float]
+    finish: dict[int, float]
+    # Per-port busy time, for utilization analysis: {(kind, rank, dir): time}
+    port_busy: dict[tuple, float]
+
+    def utilization(self, kind: str, rank: int, direction: str) -> float:
+        if self.makespan == 0:
+            return 0.0
+        return self.port_busy.get((kind, rank, direction), 0.0) / self.makespan
+
+
+def _flow_duration(flow: Flow, profile: BandwidthProfile, kind: str) -> float:
+    if kind == "nv":
+        assert profile.gpus_per_server > 1, \
+            "NVLink flows require gpus_per_server > 1"
+        return flow.size / profile.nvlink_rate
+    return flow.size * max(profile.slowdown[flow.src], profile.slowdown[flow.dst])
+
+
+def simulate(schedule: Schedule) -> SimResult:
+    """Run the schedule to completion; returns makespan and per-flow times."""
+    profile = schedule.profile
+    flows: dict[int, tuple[Flow, str]] = {}
+    for f in schedule.nic_flows:
+        flows[f.fid] = (f, "nic")
+    for f in schedule.nvlink_flows:
+        if f.fid in flows:
+            raise ValueError(f"duplicate fid {f.fid}")
+        flows[f.fid] = (f, "nv")
+
+    # Dependency bookkeeping.
+    ndeps: dict[int, int] = {}
+    dependents: dict[int, list[int]] = {}
+    for fid, (f, _) in flows.items():
+        cnt = 0
+        for d in f.deps:
+            if d not in flows:
+                raise ValueError(f"flow {fid} depends on unknown fid {d}")
+            cnt += 1
+            dependents.setdefault(d, []).append(fid)
+        ndeps[fid] = cnt
+
+    # Ports: (kind, rank, "s"/"r") -> free?  plus waiting heaps per port.
+    port_free: dict[tuple, bool] = {}
+    waiting: dict[tuple, list[int]] = {}
+    port_busy: dict[tuple, float] = {}
+
+    def ports_of(fid: int) -> tuple[tuple, tuple]:
+        f, kind = flows[fid]
+        return (kind, f.src, "s"), (kind, f.dst, "r")
+
+    for fid in flows:
+        for port in ports_of(fid):
+            port_free.setdefault(port, True)
+            waiting.setdefault(port, [])
+
+    started: set[int] = set()
+    finished: set[int] = set()
+    woken: set[int] = set()
+    start_t: dict[int, float] = {}
+    finish_t: dict[int, float] = {}
+    # (time, seq, fid, is_wake); wake events re-attempt releases.
+    events: list[tuple[float, int, int, bool]] = []
+    seq = 0
+    now = 0.0
+
+    def push_event(t: float, fid: int, is_wake: bool) -> None:
+        nonlocal seq
+        heapq.heappush(events, (t, seq, fid, is_wake))
+        seq += 1
+
+    def try_start(fid: int) -> bool:
+        if fid in started:
+            return True
+        f, kind = flows[fid]
+        if f.release > now:
+            if fid not in woken:
+                woken.add(fid)
+                push_event(f.release, fid, True)
+            return False
+        sp, rp = ports_of(fid)
+        if not (port_free[sp] and port_free[rp]):
+            return False
+        port_free[sp] = port_free[rp] = False
+        started.add(fid)
+        dur = _flow_duration(f, profile, kind)
+        start_t[fid] = now
+        finish_t[fid] = now + dur
+        port_busy[sp] = port_busy.get(sp, 0.0) + dur
+        port_busy[rp] = port_busy.get(rp, 0.0) + dur
+        push_event(now + dur, fid, False)
+        return True
+
+    def prio(fid: int) -> tuple[float, int]:
+        return flows[fid][0].priority
+
+    def enqueue_ready(fid: int) -> None:
+        # Try to start immediately; if blocked, wait on both ports.
+        if try_start(fid):
+            return
+        sp, rp = ports_of(fid)
+        heapq.heappush(waiting[sp], (prio(fid), fid))
+        heapq.heappush(waiting[rp], (prio(fid), fid))
+
+    for fid in sorted(flows, key=prio):
+        if ndeps[fid] == 0:
+            enqueue_ready(fid)
+
+    while events:
+        now, done_batch, wake_batch = events[0][0], [], []
+        # Pop every event at `now` (simultaneous completions/wakes).
+        while events and events[0][0] == now:
+            _, _, fid, is_wake = heapq.heappop(events)
+            (wake_batch if is_wake else done_batch).append(fid)
+        newly_ready: list[int] = []
+        freed_ports: list[tuple] = []
+        for fid in done_batch:
+            finished.add(fid)
+            sp, rp = ports_of(fid)
+            port_free[sp] = port_free[rp] = True
+            freed_ports.extend((sp, rp))
+            for dep in dependents.get(fid, ()):  # release dependents
+                ndeps[dep] -= 1
+                if ndeps[dep] == 0:
+                    newly_ready.append(dep)
+        for fid in wake_batch:
+            if fid not in started and ndeps[fid] == 0:
+                woken.discard(fid)
+                try_start(fid)
+        for fid in sorted(newly_ready, key=prio):
+            enqueue_ready(fid)
+        # Freed ports may admit waiting flows. Admission is work-conserving:
+        # if the highest-priority waiter is blocked on its *other* port we
+        # try lower-priority waiters (this is what packs bubble-filling
+        # flows into straggler-link gaps). Entries for already-started flows
+        # are skipped lazily.
+        for port in freed_ports:
+            q = waiting[port]
+            blocked: list[tuple] = []
+            while q and port_free[port]:
+                entry = heapq.heappop(q)
+                cand = entry[1]
+                if cand in started:
+                    continue
+                if not try_start(cand):
+                    blocked.append(entry)
+            for entry in blocked:
+                heapq.heappush(q, entry)
+
+    if len(finished) != len(flows):
+        stuck = [fid for fid in flows if fid not in finished]
+        raise RuntimeError(
+            f"deadlock: {len(stuck)}/{len(flows)} flows never ran, e.g. "
+            f"{sorted(stuck)[:5]}")
+    makespan = max(finish_t.values(), default=0.0)
+    return SimResult(makespan=makespan, start=start_t, finish=finish_t,
+                     port_busy=port_busy)

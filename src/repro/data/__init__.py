@@ -1,0 +1,3 @@
+from repro.data.synthetic import DataConfig, SyntheticLM
+
+__all__ = ["DataConfig", "SyntheticLM"]

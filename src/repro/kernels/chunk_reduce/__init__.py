@@ -1,0 +1,1 @@
+from repro.kernels.chunk_reduce.ops import chunk_reduce

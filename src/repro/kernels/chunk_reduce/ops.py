@@ -1,0 +1,22 @@
+"""jit'd public wrapper for the chunk_reduce kernel."""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.chunk_reduce.kernel import (DEFAULT_BLOCK,
+                                               chunk_reduce_pallas)
+from repro.kernels.chunk_reduce.ref import chunk_reduce_ref
+
+
+def chunk_reduce(parts: jax.Array, block: int = DEFAULT_BLOCK,
+                 use_pallas: bool = True, interpret: bool = False,
+                 out_dtype=None) -> jax.Array:
+    """Sum W partial buffers: (W, N) -> (N,), fp32 accumulation.
+
+    use_pallas=False falls back to the jnp oracle (the default on
+    non-TPU backends unless interpret=True is requested).
+    """
+    if not use_pallas:
+        return chunk_reduce_ref(parts, out_dtype)
+    return chunk_reduce_pallas(parts, block=block, interpret=interpret,
+                               out_dtype=out_dtype)

@@ -1,0 +1,8 @@
+"""Pure-jnp oracle for chunk_reduce."""
+import jax.numpy as jnp
+
+
+def chunk_reduce_ref(parts: jnp.ndarray, out_dtype=None) -> jnp.ndarray:
+    """parts: (W, N) -> (N,): fp32-accumulated elementwise sum."""
+    out_dtype = out_dtype or parts.dtype
+    return parts.astype(jnp.float32).sum(axis=0).astype(out_dtype)

@@ -1,0 +1,123 @@
+"""Pallas TPU kernel: blockwise (flash) attention with causal/window masks.
+
+The models' dominant compute at training shapes. Grid:
+(batch, q_heads, q_blocks, kv_blocks) with the kv dimension innermost and
+"arbitrary" (sequential), carrying the online-softmax state (m, l, acc) in
+VMEM scratch across kv steps. GQA is handled in the index maps: q head h
+reads kv head h // (H // KV). Block shapes are MXU/lane aligned
+(multiples of 128 on the seq dims; head_dim rides along whole).
+
+Softmax statistics in fp32 regardless of input dtype.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+                  scale, causal, window, bq, bkv, nkv, seq_kv):
+    qi = pl.program_id(2)
+    ki = pl.program_id(3)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0, 0].astype(jnp.float32)          # (bq, hd)
+    k = k_ref[0, 0].astype(jnp.float32)          # (bkv, hd)
+    v = v_ref[0, 0].astype(jnp.float32)          # (bkv, hd)
+    s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
+
+    iq = qi * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bkv), 0)
+    jk = ki * bkv + jax.lax.broadcasted_iota(jnp.int32, (bq, bkv), 1)
+    ok = jk < seq_kv
+    if causal:
+        ok = ok & (jk <= iq)
+    if window > 0:
+        ok = ok & (jk > iq - window)
+    s = jnp.where(ok, s, NEG_INF)
+
+    m_prev, l_prev = m_ref[...], l_ref[...]
+    m_new = jnp.maximum(m_prev, s.max(axis=-1))
+    p = jnp.exp(s - m_new[:, None])
+    corr = jnp.exp(m_prev - m_new)
+    l_new = l_prev * corr + p.sum(axis=-1)
+    acc_ref[...] = acc_ref[...] * corr[:, None] + jnp.dot(
+        p, v, preferred_element_type=jnp.float32)
+    m_ref[...] = m_new
+    l_ref[...] = l_new
+
+    @pl.when(ki == nkv - 1)
+    def _finish():
+        o_ref[0, 0] = (acc_ref[...] /
+                       jnp.maximum(l_ref[...], 1e-30)[:, None]
+                       ).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("causal", "window", "bq", "bkv", "interpret"))
+def flash_attention_pallas(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                           causal: bool = True, window: int = 0,
+                           bq: int = 128, bkv: int = 128,
+                           interpret: bool = False) -> jax.Array:
+    """q: (B, Sq, H, hd); k, v: (B, Skv, KV, hd) -> (B, Sq, H, hd)."""
+    B, Sq, H, hd = q.shape
+    _, Skv, KV, _ = k.shape
+    assert H % KV == 0
+    rep = H // KV
+    scale = 1.0 / (hd ** 0.5)
+
+    bq = min(bq, max(8, Sq))
+    bkv = min(bkv, max(8, Skv))
+    pad_q = (-Sq) % bq
+    pad_kv = (-Skv) % bkv
+    if pad_q:
+        q = jnp.pad(q, ((0, 0), (0, pad_q), (0, 0), (0, 0)))
+    if pad_kv:
+        k = jnp.pad(k, ((0, 0), (0, pad_kv), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad_kv), (0, 0), (0, 0)))
+    # (B, H, S, hd) layout for clean blocking
+    qt = q.transpose(0, 2, 1, 3)
+    kt = k.transpose(0, 2, 1, 3)
+    vt = v.transpose(0, 2, 1, 3)
+    nq = qt.shape[2] // bq
+    nkv = kt.shape[2] // bkv
+
+    kernel = functools.partial(
+        _flash_kernel, scale=scale, causal=causal, window=window,
+        bq=bq, bkv=bkv, nkv=nkv, seq_kv=Skv)
+
+    out = pl.pallas_call(
+        kernel,
+        grid=(B, H, nq, nkv),
+        in_specs=[
+            pl.BlockSpec((1, 1, bq, hd), lambda b, h, qi, ki: (b, h, qi, 0)),
+            pl.BlockSpec((1, 1, bkv, hd),
+                         lambda b, h, qi, ki: (b, h // rep, ki, 0)),
+            pl.BlockSpec((1, 1, bkv, hd),
+                         lambda b, h, qi, ki: (b, h // rep, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, bq, hd),
+                               lambda b, h, qi, ki: (b, h, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct(qt.shape, q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq,), jnp.float32),
+            pltpu.VMEM((bq,), jnp.float32),
+            pltpu.VMEM((bq, hd), jnp.float32),
+        ],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "parallel",
+                                 "arbitrary")),
+        interpret=interpret,
+    )(qt, kt, vt)
+    out = out.transpose(0, 2, 1, 3)
+    return out[:, :Sq]

@@ -1,0 +1,6 @@
+"""Pure-jnp oracle for flash attention: the direct quadratic path."""
+from repro.models.attention import direct_attention
+
+
+def flash_attention_ref(q, k, v, *, causal=True, window=0):
+    return direct_attention(q, k, v, causal=causal, window=window)

@@ -1,0 +1,13 @@
+"""jit'd public wrapper for the wkv kernel."""
+from __future__ import annotations
+
+from repro.kernels.wkv.kernel import wkv_pallas
+from repro.kernels.wkv.ref import wkv_ref
+
+
+def wkv(r, k, v, w, u, state0=None, use_pallas: bool = True,
+        interpret: bool = False):
+    if not use_pallas:
+        out, state = wkv_ref(r, k, v, w, u)
+        return out, state
+    return wkv_pallas(r, k, v, w, u, state0, interpret=interpret)

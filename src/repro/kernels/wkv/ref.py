@@ -1,0 +1,25 @@
+"""Pure-jnp oracle for the rwkv6 wkv recurrence."""
+import jax.numpy as jnp
+from jax import lax
+
+
+def wkv_ref(r, k, v, w, u):
+    """r,k,v,w: (B, S, H, hd) fp32; u: (H, hd).
+
+    out_t = r_t . (S + u * k_t^T v_t);  S' = diag(w_t) S + k_t^T v_t
+    Returns (out (B,S,H,hd), final_state (B,H,hd,hd)).
+    """
+    B, S, H, hd = r.shape
+
+    def step(state, inp):
+        r_t, k_t, v_t, w_t = inp
+        kv = jnp.einsum("bhk,bhv->bhkv", k_t, v_t)
+        out = jnp.einsum("bhk,bhkv->bhv", r_t,
+                         state + u[None, :, :, None] * kv)
+        return w_t[..., None] * state + kv, out
+
+    init = jnp.zeros((B, H, hd, hd), jnp.float32)
+    state, outs = lax.scan(
+        step, init, (r.swapaxes(0, 1), k.swapaxes(0, 1),
+                     v.swapaxes(0, 1), w.swapaxes(0, 1)))
+    return outs.swapaxes(0, 1), state

@@ -1,0 +1,123 @@
+"""Production mesh + input specs for the multi-pod dry-run.
+
+make_production_mesh is a FUNCTION (not module-level state) so importing
+this module never touches jax device state.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs import ShapeCell, get_config
+from repro.configs.base import ModelConfig
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def batch_axes(mesh: Mesh) -> tuple:
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def _sds(shape, dtype, mesh, spec):
+    return jax.ShapeDtypeStruct(shape, jnp.dtype(dtype),
+                                sharding=NamedSharding(mesh, spec))
+
+
+def _bspec(mesh, B: int, extra_dims: int = 1) -> P:
+    """Shard the leading batch dim over pod x data when divisible."""
+    ba = batch_axes(mesh)
+    n = np.prod([mesh.shape[a] for a in ba])
+    if B % n == 0:
+        return P(ba if len(ba) > 1 else ba[0], *([None] * extra_dims))
+    if B % mesh.shape["data"] == 0:
+        return P("data", *([None] * extra_dims))
+    return P(*([None] * (extra_dims + 1)))
+
+
+def token_positions_spec(cfg: ModelConfig, mesh, B, S):
+    """ShapeDtypeStructs for the token inputs of one train batch."""
+    bspec = _bspec(mesh, B, 1)
+    batch = {
+        "tokens": _sds((B, S), jnp.int32, mesh, bspec),
+        "labels": _sds((B, S), jnp.int32, mesh, bspec),
+    }
+    if cfg.family == "whisper":
+        batch["frames"] = _sds((B, cfg.n_audio_frames, cfg.d_model),
+                               jnp.bfloat16, mesh, _bspec(mesh, B, 2))
+    if cfg.family == "vlm":
+        batch["prefix_embeds"] = _sds(
+            (B, cfg.n_patch_tokens, cfg.d_model), jnp.bfloat16, mesh,
+            _bspec(mesh, B, 2))
+    return batch
+
+
+def input_specs(arch: str, shape: ShapeCell, mesh: Mesh,
+                cfg: ModelConfig | None = None) -> dict:
+    """ShapeDtypeStruct stand-ins for every model input of a cell.
+
+    train:   {tokens, labels, extras}  (vlm text tokens shrink by the
+             stubbed patch-prefix so total context == shape.seq_len)
+    prefill: {tokens, extras}
+    decode:  {token (B,1), pos scalar}  (cache specs built separately)
+    """
+    cfg = cfg or get_config(arch)
+    B, S = shape.global_batch, shape.seq_len
+    if cfg.family == "vlm":
+        S_text = S - cfg.n_patch_tokens
+    else:
+        S_text = S
+    if shape.kind == "train":
+        batch = token_positions_spec(cfg, mesh, B, S_text)
+        return batch
+    if shape.kind == "prefill":
+        batch = token_positions_spec(cfg, mesh, B, S_text)
+        batch.pop("labels")
+        return batch
+    # decode: one token, cache of length S
+    bspec = _bspec(mesh, B, 1)
+    return {
+        "tokens": _sds((B, 1), jnp.int32, mesh, bspec),
+        "pos": jax.ShapeDtypeStruct((), jnp.int32),
+    }
+
+
+def cache_specs(cfg: ModelConfig, mesh: Mesh, B: int, S: int) -> dict:
+    """Sharded ShapeDtypeStructs for the decode cache (family-aware).
+
+    Sharding rules: batch over pod x data when divisible, else the
+    sequence dim; KV heads over model when divisible, else the head dim
+    stays unsharded and the seq dim takes model.
+    """
+    from repro.models import build_model
+    model = build_model(cfg)
+    template = jax.eval_shape(lambda: model.init_cache(B, S))
+    ba = batch_axes(mesh)
+    nb = int(np.prod([mesh.shape[a] for a in ba]))
+    m = mesh.shape["model"]
+
+    def spec_for(leaf):
+        shp = leaf.shape
+        spec = [None] * len(shp)
+        if len(shp) >= 3:
+            # (L, B, S-or-window, ...) layout for all families
+            if shp[1] % nb == 0 and shp[1] > 1:
+                spec[1] = ba if len(ba) > 1 else ba[0]
+            elif shp[2] % nb == 0 and shp[2] >= nb:
+                spec[2] = ba if len(ba) > 1 else ba[0]
+            # model axis: KV heads (dim 3) else seq (dim 2)
+            if len(shp) >= 5 and shp[3] % m == 0 and shp[3] >= m:
+                spec[3] = "model"
+            elif spec[2] is None and shp[2] % m == 0 and shp[2] >= m:
+                spec[2] = "model"
+            elif len(shp) == 3 and shp[2] % m == 0:   # rwkv tshift (L,B,d)
+                spec[2] = "model"
+        return jax.ShapeDtypeStruct(
+            leaf.shape, leaf.dtype, sharding=NamedSharding(mesh, P(*spec)))
+
+    return jax.tree.map(spec_for, template)

@@ -1,0 +1,146 @@
+"""End-to-end training driver with fault tolerance.
+
+Runs data-parallel training with:
+  * checkpoint/restart (atomic, auto-resume from the latest step),
+  * deterministic failure injection (NIC degradation events) -> on each
+    event the OptCC planner produces the new collective schedule and the
+    train step is re-built (re-jit), mirroring NCCL communicator re-init,
+  * straggler mitigation = the paper's algorithm (degraded mode syncs
+    gradients with optcc_allreduce instead of psum).
+
+Works on any device count >= 1 (the DP axis is however many devices jax
+sees; force more with XLA_FLAGS=--xla_force_host_platform_device_count=8).
+
+  PYTHONPATH=src python -m repro.launch.train --arch qwen3-1.7b --smoke \
+      --steps 200 --fail-at 60 --repair-at 120 --ckpt-dir /tmp/ckpt
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh
+
+from repro.checkpoint import latest_step, restore, save
+from repro.comms.fault import FailureInjector, FaultState
+from repro.configs import get_config
+from repro.data import DataConfig, SyntheticLM
+from repro.models import build_model
+from repro.optim import AdamWConfig
+from repro.optim.schedules import warmup_stable_decay
+from repro.train import init_train_state, make_dp_failover_step
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen3-1.7b")
+    ap.add_argument("--smoke", action="store_true",
+                    help="use the reduced config (CPU-friendly)")
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--seq-len", type=int, default=128)
+    ap.add_argument("--global-batch", type=int, default=8)
+    ap.add_argument("--lr", type=float, default=1e-2)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--fail-at", type=int, default=None,
+                    help="inject NIC degradation at this step")
+    ap.add_argument("--repair-at", type=int, default=None)
+    ap.add_argument("--ell", type=float, default=1.5,
+                    help="slowdown factor of the injected degradation")
+    ap.add_argument("--straggler", type=int, default=0)
+    ap.add_argument("--log-every", type=int, default=10)
+    ap.add_argument("--lose-node-at", type=int, default=None,
+                    help="simulate losing half the DP members at this "
+                         "step: checkpoint, rebuild the mesh on the "
+                         "survivors, restore, continue (elastic rescale)")
+    args = ap.parse_args(argv)
+
+    cfg = get_config(args.arch, smoke=args.smoke)
+    model = build_model(cfg)
+    dp = jax.device_count()
+    mesh = Mesh(np.array(jax.devices()), ("data",))
+    opt = AdamWConfig(weight_decay=0.01)
+    lr_fn = warmup_stable_decay(args.lr, warmup=20,
+                                stable=max(args.steps - 60, 10), decay=40)
+
+    data = SyntheticLM(DataConfig(vocab_size=cfg.vocab_size,
+                                  seq_len=args.seq_len,
+                                  global_batch=args.global_batch))
+    injector = None
+    if args.fail_at is not None:
+        if dp < 3:
+            print(f"NOTE: only {dp} device(s) visible - OptCC needs a DP "
+                  "ring of >= 3; failure injection disabled. Run with "
+                  "XLA_FLAGS=--xla_force_host_platform_device_count=8 "
+                  "to see the failover path.")
+        else:
+            injector = FailureInjector.nic_loss(
+                dp, args.fail_at, args.straggler % dp, args.ell,
+                repair_step=args.repair_at)
+
+    fault = FaultState(axis_size=dp)
+    step_fn = make_dp_failover_step(model, mesh, opt, lr_fn, fault)
+    state = init_train_state(model, opt)
+    start = 0
+    if args.ckpt_dir and latest_step(args.ckpt_dir) is not None:
+        state, meta = restore(args.ckpt_dir, state)
+        start = int(meta["step"])
+        print(f"resumed from checkpoint at step {start}")
+
+    t0 = time.time()
+    step = start
+    while step < args.steps:
+        if args.lose_node_at is not None and step == args.lose_node_at \
+                and dp > 1:
+            # Elastic rescale: half the DP members "fail". Checkpoint,
+            # rebuild mesh + step on the survivors, restore, continue.
+            # (Batches stay deterministic: the pipeline is keyed on
+            # (seed, step), not on the shard layout.)
+            ckpt = args.ckpt_dir or "/tmp/repro_elastic_ckpt"
+            save(ckpt, step, state)
+            dp = max(dp // 2, 1)
+            devices = jax.devices()[:dp]
+            mesh = Mesh(np.array(devices), ("data",))
+            fault = FaultState(axis_size=dp)
+            injector = None   # old ring is gone
+            step_fn = make_dp_failover_step(model, mesh, opt, lr_fn,
+                                            fault)
+            state, _ = restore(ckpt, state)
+            state = jax.device_put(state)
+            print(f"step {step}: NODE LOSS - resumed on {dp} devices "
+                  f"(elastic reshard from checkpoint)")
+        if injector is not None:
+            new_fault = injector.at_step(step, fault)
+            if new_fault != fault:
+                fault = new_fault
+                if fault.degraded:
+                    n_grad = sum(int(np.prod(x.shape)) for x in
+                                 jax.tree.leaves(state.params))
+                    plan = fault.plan(n_grad)
+                    print(f"step {step}: DEGRADED (straggler="
+                          f"{fault.straggler}, l={fault.ell}); planner "
+                          f"chose {plan.algo}, predicted overhead "
+                          f"{plan.predicted_overhead:.3f}x, plan built in "
+                          f"{plan.gen_seconds * 1e3:.2f} ms")
+                else:
+                    print(f"step {step}: REPAIRED; back to native psum")
+                step_fn = make_dp_failover_step(model, mesh, opt, lr_fn,
+                                                fault)
+        batch = jax.tree.map(jnp.asarray, data.batch(step))
+        state, metrics = step_fn(state, batch)
+        if step % args.log_every == 0 or step == args.steps - 1:
+            print(f"step {step:5d} loss {float(metrics['loss']):.4f} "
+                  f"gnorm {float(metrics['grad_norm']):.3f} "
+                  f"({(time.time() - t0):.1f}s)", flush=True)
+        if args.ckpt_dir and (step + 1) % args.ckpt_every == 0:
+            save(args.ckpt_dir, step + 1, state)
+        step += 1
+    print("done")
+    return state
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,78 @@
+"""Unified model API: build_model(cfg) -> Model with init/loss/prefill/
+decode_step, uniform across the 6 families (dense, moe, vlm share the
+transformer implementation; rwkv6, hymba, whisper have their own).
+
+All functions are pure and jit-friendly; batches are dicts:
+  train:   {tokens, labels, [frames], [prefix_embeds], [positions]}
+  prefill: {tokens, [frames], [prefix_embeds]}
+  decode:  (cache, tokens (B,1), pos scalar)
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import hymba, rwkv6, transformer, whisper
+
+
+@dataclasses.dataclass(frozen=True)
+class Model:
+    cfg: ModelConfig
+    init: Callable[[Any], dict]
+    loss: Callable[[dict, dict], jax.Array]
+    prefill: Callable[[dict, dict], tuple]
+    decode_step: Callable[[dict, dict, jax.Array, jax.Array], tuple]
+    init_cache: Callable[[int, int], dict]
+
+    def param_count(self, params) -> int:
+        return sum(x.size for x in jax.tree.leaves(params))
+
+
+def build_model(cfg: ModelConfig) -> Model:
+    fam = cfg.family
+    if fam in ("dense", "moe", "vlm"):
+        return Model(
+            cfg=cfg,
+            init=lambda key: transformer.init_params(cfg, key),
+            loss=lambda p, b: transformer.loss_fn(cfg, p, b),
+            prefill=lambda p, b: transformer.prefill(cfg, p, b["tokens"]),
+            decode_step=lambda p, c, t, pos:
+                transformer.decode_step(cfg, p, c, t, pos),
+            init_cache=lambda b, s: transformer.init_cache(cfg, b, s),
+        )
+    if fam == "rwkv6":
+        return Model(
+            cfg=cfg,
+            init=lambda key: rwkv6.init_params(cfg, key),
+            loss=lambda p, b: rwkv6.loss_fn(cfg, p, b),
+            prefill=lambda p, b: rwkv6.prefill(cfg, p, b["tokens"]),
+            decode_step=lambda p, c, t, pos:
+                rwkv6.decode_step(cfg, p, c, t, pos),
+            init_cache=lambda b, s: rwkv6.init_cache(cfg, b, s),
+        )
+    if fam == "hymba":
+        return Model(
+            cfg=cfg,
+            init=lambda key: hymba.init_params(cfg, key),
+            loss=lambda p, b: hymba.loss_fn(cfg, p, b),
+            prefill=lambda p, b: hymba.prefill(cfg, p, b["tokens"]),
+            decode_step=lambda p, c, t, pos:
+                hymba.decode_step(cfg, p, c, t, pos),
+            init_cache=lambda b, s: hymba.init_cache(cfg, b, s),
+        )
+    if fam == "whisper":
+        return Model(
+            cfg=cfg,
+            init=lambda key: whisper.init_params(cfg, key),
+            loss=lambda p, b: whisper.loss_fn(cfg, p, b),
+            prefill=lambda p, b: whisper.prefill(cfg, p, b["tokens"],
+                                                 b["frames"]),
+            decode_step=lambda p, c, t, pos:
+                whisper.decode_step(cfg, p, c, t, pos),
+            init_cache=lambda b, s: whisper.init_cache(cfg, b, s),
+        )
+    raise ValueError(f"unknown family {fam}")

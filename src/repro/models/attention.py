@@ -1,0 +1,168 @@
+"""GQA attention: flash-style chunked training path + KV-cache decode path.
+
+The chunked path (online softmax over KV blocks inside a scan over Q
+blocks) is the pure-jnp oracle for kernels/flash_attention and keeps
+activation memory O(q_chunk * kv_chunk) - required for 32k prefill at a
+262k-vocab model's batch sizes. All softmax math in fp32.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+NEG_INF = -1e30
+
+
+def _expand_kv(k: jax.Array, n_heads: int) -> jax.Array:
+    """(B, S, KV, hd) -> (B, S, H, hd) by repeating each KV head."""
+    rep = n_heads // k.shape[2]
+    if rep == 1:
+        return k
+    return jnp.repeat(k, rep, axis=2)
+
+
+def _mask(iq, jk, causal: bool, window: int):
+    ok = jnp.ones((iq.shape[0], jk.shape[0]), jnp.bool_)
+    if causal:
+        ok = ok & (jk[None, :] <= iq[:, None])
+    if window > 0:
+        ok = ok & (jk[None, :] > iq[:, None] - window)
+    return ok
+
+
+def chunked_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                      causal: bool = True, window: int = 0,
+                      q_chunk: int = 256, kv_chunk: int = 1024,
+                      q_offset: int = 0) -> jax.Array:
+    """q: (B,Sq,H,hd); k,v: (B,Skv,KV,hd) -> (B,Sq,H,hd)."""
+    B, Sq, H, hd = q.shape
+    Skv = k.shape[1]
+    k = _expand_kv(k, H)
+    v = _expand_kv(v, H)
+    scale = 1.0 / jnp.sqrt(hd).astype(jnp.float32)
+
+    q_chunk = min(q_chunk, Sq)
+    kv_chunk = min(kv_chunk, Skv)
+    pad_q = (-Sq) % q_chunk
+    pad_kv = (-Skv) % kv_chunk
+    if pad_q:
+        q = jnp.pad(q, ((0, 0), (0, pad_q), (0, 0), (0, 0)))
+    if pad_kv:
+        k = jnp.pad(k, ((0, 0), (0, pad_kv), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad_kv), (0, 0), (0, 0)))
+    nq, nkv = q.shape[1] // q_chunk, k.shape[1] // kv_chunk
+
+    # (nq, B, H, cq, hd) blocks
+    qb = q.reshape(B, nq, q_chunk, H, hd).transpose(1, 0, 3, 2, 4)
+    kb = k.reshape(B, nkv, kv_chunk, H, hd).transpose(1, 0, 3, 2, 4)
+    vb = v.reshape(B, nkv, kv_chunk, H, hd).transpose(1, 0, 3, 2, 4)
+
+    # Sliding-window block skipping: query block qi only needs KV blocks
+    # covering [iq_min - window, iq_max], a FIXED count of relative block
+    # offsets - compute drops from O(S^2) to O(S * window) (hymba and
+    # gemma3 local layers at 32k+). Plain causal keeps the full masked
+    # scan (its needed span varies per q block).
+    windowed = window > 0
+    if windowed:
+        span = window + q_chunk + kv_chunk
+        n_rel = min(nkv, (span + kv_chunk - 1) // kv_chunk + 1)
+
+    def q_body(_, qi_blk):
+        qi, blk = qi_blk
+        iq = q_offset + qi * q_chunk + jnp.arange(q_chunk)
+        hi_blk = (q_offset + (qi + 1) * q_chunk - 1) // kv_chunk \
+            if causal else nkv - 1
+
+        def kv_step(carry, kvj, kblk, vblk, extra_ok):
+            m, l, acc = carry
+            jk = kvj * kv_chunk + jnp.arange(kv_chunk)
+            s = jnp.einsum("bhqd,bhkd->bhqk", blk.astype(jnp.float32),
+                           kblk.astype(jnp.float32)) * scale
+            ok = _mask(iq, jk, causal, window)
+            ok = ok & (jk < Skv)[None, :] & extra_ok
+            s = jnp.where(ok[None, None], s, NEG_INF)
+            m_new = jnp.maximum(m, s.max(-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + p.sum(-1)
+            acc_new = acc * corr[..., None] + jnp.einsum(
+                "bhqk,bhkd->bhqd", p, vblk.astype(jnp.float32))
+            return (m_new, l_new, acc_new)
+
+        m0 = jnp.full((B, H, q_chunk), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((B, H, q_chunk), jnp.float32)
+        a0 = jnp.zeros((B, H, q_chunk, hd), jnp.float32)
+
+        if windowed:
+            def kv_body(carry, rel):
+                kvj = jnp.clip(hi_blk - rel, 0, nkv - 1)
+                kblk = lax.dynamic_index_in_dim(kb, kvj, 0, False)
+                vblk = lax.dynamic_index_in_dim(vb, kvj, 0, False)
+                return kv_step(carry, kvj, kblk, vblk,
+                               rel <= hi_blk), None
+            (m, l, acc), _ = lax.scan(kv_body, (m0, l0, a0),
+                                      jnp.arange(n_rel))
+        else:
+            def kv_body(carry, kv):
+                kvj, kblk, vblk = kv
+                return kv_step(carry, kvj, kblk, vblk, True), None
+            (m, l, acc), _ = lax.scan(
+                kv_body, (m0, l0, a0), (jnp.arange(nkv), kb, vb))
+        out = acc / jnp.maximum(l, 1e-30)[..., None]
+        return None, out
+
+    _, ob = lax.scan(q_body, None, (jnp.arange(nq), qb))
+    out = ob.transpose(1, 0, 3, 2, 4).reshape(B, nq * q_chunk, H, hd)
+    return out[:, :Sq].astype(q.dtype)
+
+
+def direct_attention(q, k, v, *, causal=True, window: int = 0,
+                     q_offset: int = 0) -> jax.Array:
+    """Reference quadratic path for short sequences / tests."""
+    B, Sq, H, hd = q.shape
+    Skv = k.shape[1]
+    k = _expand_kv(k, H)
+    v = _expand_kv(v, H)
+    s = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) / jnp.sqrt(hd)
+    iq = q_offset + jnp.arange(Sq)
+    jk = jnp.arange(Skv)
+    ok = _mask(iq, jk, causal, window)
+    s = jnp.where(ok[None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhqk,bkhd->bqhd", p, v.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+def decode_attention(q, k_cache, v_cache, pos, *, window: int = 0
+                     ) -> jax.Array:
+    """One-token attention against a (B, Smax, KV, hd) cache.
+
+    pos: scalar current position (the cache holds entries [0, pos]).
+    """
+    B, one, H, hd = q.shape
+    Smax = k_cache.shape[1]
+    k = _expand_kv(k_cache, H)
+    v = _expand_kv(v_cache, H)
+    s = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) / jnp.sqrt(hd)
+    jk = jnp.arange(Smax)
+    ok = jk <= pos
+    if window > 0:
+        ok = ok & (jk > pos - window)
+    s = jnp.where(ok[None, None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhqk,bkhd->bqhd", p, v.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+def attention(q, k, v, *, causal=True, window: int = 0, q_offset: int = 0,
+              chunked_threshold: int = 1024) -> jax.Array:
+    if q.shape[1] <= chunked_threshold and k.shape[1] <= chunked_threshold:
+        return direct_attention(q, k, v, causal=causal, window=window,
+                                q_offset=q_offset)
+    return chunked_attention(q, k, v, causal=causal, window=window,
+                             q_offset=q_offset)

@@ -1,0 +1,157 @@
+"""Shared building blocks: norms, RoPE / M-RoPE, MLPs, embeddings, losses."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+
+
+def cast(x, dtype_str):
+    return x.astype(jnp.dtype(dtype_str))
+
+
+def rms_norm(x: jax.Array, weight: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    out = xf * lax.rsqrt(var + eps) * (1.0 + weight.astype(jnp.float32))
+    return out.astype(dt)
+
+
+def swiglu(x: jax.Array, w_gate, w_up, w_down) -> jax.Array:
+    g = jnp.einsum("...d,df->...f", x, w_gate)
+    u = jnp.einsum("...d,df->...f", x, w_up)
+    return jnp.einsum("...f,fd->...d", jax.nn.silu(g) * u, w_down)
+
+
+def gelu_mlp(x: jax.Array, w_in, b_in, w_out, b_out) -> jax.Array:
+    h = jax.nn.gelu(jnp.einsum("...d,df->...f", x, w_in) + b_in)
+    return jnp.einsum("...f,fd->...d", h, w_out) + b_out
+
+
+# ----------------------------------------------------------------------------
+# Rotary embeddings (standard + Qwen2-VL M-RoPE)
+# ----------------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2,
+                                       dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float
+               ) -> jax.Array:
+    """x: (B, S, H, hd); positions: (B, S) int32."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)                        # (hd/2,)
+    ang = positions[..., None].astype(jnp.float32) * freqs   # (B,S,hd/2)
+    cos, sin = jnp.cos(ang)[:, :, None, :], jnp.sin(ang)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], -1)
+    return out.astype(x.dtype)
+
+
+def apply_mrope(x: jax.Array, positions: jax.Array, theta: float,
+                sections=(16, 24, 24)) -> jax.Array:
+    """Qwen2-VL multimodal RoPE: positions (B, S, 3) = (t, h, w) ids.
+
+    The hd/2 frequency channels are split into three sections rotated by
+    the temporal / height / width position respectively (text tokens carry
+    identical ids in all three, reducing to standard RoPE).
+    """
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)                        # (hd/2,)
+    half = hd // 2
+    secs = np.asarray(sections, dtype=np.int64)
+    secs = (secs * half // secs.sum())
+    secs[-1] = half - secs[:-1].sum()
+    sel = np.concatenate([np.full(s, i) for i, s in enumerate(secs)])
+    pos3 = positions.astype(jnp.float32)                 # (B,S,3)
+    pos = jnp.take_along_axis(
+        pos3, jnp.asarray(sel)[None, None, :].repeat(pos3.shape[0], 0)
+        .repeat(pos3.shape[1], 1), axis=-1)              # (B,S,hd/2)
+    ang = pos * freqs
+    cos, sin = jnp.cos(ang)[:, :, None, :], jnp.sin(ang)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], -1)
+    return out.astype(x.dtype)
+
+
+# ----------------------------------------------------------------------------
+# Vocab-chunked softmax cross-entropy (never materializes full logits)
+# ----------------------------------------------------------------------------
+
+def chunked_softmax_xent(h: jax.Array, w_out: jax.Array, labels: jax.Array,
+                         chunk: int = 256, z_loss: float = 0.0) -> jax.Array:
+    """Mean token NLL of labels under softmax(h @ w_out).
+
+    h: (B, S, d); w_out: (d, V); labels: (B, S) int32; label -100 = masked.
+    Scans over sequence chunks so the logits tensor is (B, chunk, V) at a
+    time - essential for 262k vocabularies at 4k+ sequance lengths.
+    """
+    B, S, d = h.shape
+    pad = (-S) % chunk
+    if pad:
+        h = jnp.pad(h, ((0, 0), (0, pad), (0, 0)))
+        labels = jnp.pad(labels, ((0, 0), (0, pad)),
+                         constant_values=-100)
+    nchunks = h.shape[1] // chunk
+    hc = h.reshape(B, nchunks, chunk, d).swapaxes(0, 1)
+    lc = labels.reshape(B, nchunks, chunk).swapaxes(0, 1)
+
+    def body(carry, inp):
+        nll_sum, z_sum, count = carry
+        hx, lx = inp
+        logits = jnp.einsum("bsd,dv->bsv", hx.astype(jnp.float32),
+                            w_out.astype(jnp.float32))
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        mask = lx >= 0
+        safe = jnp.where(mask, lx, 0)
+        gold = jnp.take_along_axis(logits, safe[..., None], -1)[..., 0]
+        nll = jnp.where(mask, lse - gold, 0.0)
+        zl = jnp.where(mask, lse * lse, 0.0)
+        return (nll_sum + nll.sum(), z_sum + zl.sum(),
+                count + mask.sum()), None
+
+    (nll, zl, cnt), _ = lax.scan(body, (0.0, 0.0, 0), (hc, lc))
+    cnt = jnp.maximum(cnt, 1)
+    return nll / cnt + z_loss * zl / cnt
+
+
+def embed_tokens(embedding: jax.Array, tokens: jax.Array,
+                 compute_dtype) -> jax.Array:
+    return embedding[tokens].astype(compute_dtype)
+
+
+def init_dense(key, shape, scale=None, dtype=jnp.float32):
+    fan_in = shape[0] if len(shape) >= 2 else 1
+    scale = scale if scale is not None else 1.0 / np.sqrt(fan_in)
+    return (jax.random.normal(key, shape, jnp.float32) * scale).astype(dtype)
+
+
+def chunked_scan(f, init, xs, chunk: int):
+    """lax.scan over time with chunked rematerialization.
+
+    Equivalent to lax.scan(f, init, xs) but the backward pass stores the
+    carry only at chunk boundaries and recomputes inside each chunk -
+    O(S/chunk * |carry| + chunk * |step|) memory instead of O(S * |carry|).
+    xs: pytree with leading time axis; returns (carry, ys) like lax.scan.
+    """
+    S = jax.tree.leaves(xs)[0].shape[0]
+    chunk = max(1, min(chunk, S))
+    pad = (-S) % chunk
+    if pad:
+        xs = jax.tree.map(
+            lambda a: jnp.pad(a, [(0, pad)] + [(0, 0)] * (a.ndim - 1)), xs)
+    nc = (S + pad) // chunk
+    xs_c = jax.tree.map(
+        lambda a: a.reshape((nc, chunk) + a.shape[1:]), xs)
+
+    @jax.checkpoint
+    def outer(carry, xc):
+        return lax.scan(f, carry, xc)
+
+    carry, ys = lax.scan(outer, init, xs_c)
+    ys = jax.tree.map(
+        lambda a: a.reshape((nc * chunk,) + a.shape[2:])[:S], ys)
+    return carry, ys

@@ -1,0 +1,236 @@
+"""Hymba: hybrid-head blocks - attention heads and Mamba (selective SSM)
+heads run *in parallel* on the same input, their normalized outputs are
+averaged (arXiv:2411.13676). Attention uses a sliding window (the SSM
+branch carries the long-range state), so decode state is
+O(window + d*ssm_state) per layer - sub-quadratic for long_500k.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import ModelConfig
+from repro.models import attention as attn
+from repro.models.common import (chunked_scan, chunked_softmax_xent,
+                                 embed_tokens, init_dense, rms_norm, swiglu)
+from repro.models.transformer import _project_qkv
+
+
+def init_params(cfg: ModelConfig, key) -> dict:
+    d, f, L = cfg.d_model, cfg.d_ff, cfg.n_layers
+    N = cfg.ssm_state
+    ks = jax.random.split(key, 16)
+    dt = jnp.dtype(cfg.param_dtype)
+    H, KV, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+
+    def W(i, shape):
+        return init_dense(ks[i], (L,) + shape, dtype=dt)
+
+    blocks = {
+        "ln1": jnp.zeros((L, d), dt),
+        # attention branch
+        "wq": W(0, (d, H * hd)), "wk": W(1, (d, KV * hd)),
+        "wv": W(2, (d, KV * hd)), "wo": W(3, (H * hd, d)),
+        "attn_norm": jnp.zeros((L, d), dt),
+        # mamba branch (d_inner = d)
+        "m_in": W(4, (d, 2 * d)),                  # x and gate z
+        "m_conv": init_dense(ks[5], (L, 4, d), scale=0.5, dtype=dt),
+        "m_xbc": W(6, (d, 2 * N + d)),             # B, C, Delta projections
+        "m_dt_bias": jnp.zeros((L, d), jnp.float32),
+        "m_alog": jnp.broadcast_to(
+            jnp.log(jnp.arange(1, N + 1, dtype=jnp.float32)), (L, d, N)),
+        "m_d": jnp.ones((L, d), jnp.float32),
+        "m_out": W(7, (d, d)),
+        "mamba_norm": jnp.zeros((L, d), dt),
+        # shared mlp
+        "ln2": jnp.zeros((L, d), dt),
+        "w_gate": W(8, (d, f)), "w_up": W(9, (d, f)),
+        "w_down": W(10, (f, d)),
+    }
+    return {
+        "embed": init_dense(ks[11], (cfg.vocab_size, d), scale=0.02,
+                            dtype=dt),
+        "blocks": blocks,
+        "final_norm": jnp.zeros((d,), dt),
+        "lm_head": init_dense(ks[12], (d, cfg.vocab_size), scale=0.02,
+                              dtype=dt),
+    }
+
+
+def _mamba_scan(cfg, bp, h, conv_state=None, ssm_state=None):
+    """Selective SSM over (B, S, d). Returns (out, conv_state, ssm_state)."""
+    B, S, d = h.shape
+    N = cfg.ssm_state
+    xz = jnp.einsum("bsd,de->bse", h, bp["m_in"])
+    x, z = jnp.split(xz, 2, axis=-1)
+    # depthwise causal conv, kernel 4
+    k = bp["m_conv"].astype(jnp.float32)               # (4, d)
+    xp = x.astype(jnp.float32)
+    if conv_state is None:
+        conv_in = jnp.pad(xp, ((0, 0), (3, 0), (0, 0)))
+    else:
+        conv_in = jnp.concatenate([conv_state.astype(jnp.float32), xp], 1)
+    xc = sum(conv_in[:, i:i + S] * k[i] for i in range(4))
+    new_conv_state = conv_in[:, -3:].astype(h.dtype)
+    xc = jax.nn.silu(xc)
+
+    bcd = jnp.einsum("bsd,de->bse", xc.astype(h.dtype), bp["m_xbc"])
+    Bm = bcd[..., :N].astype(jnp.float32)              # (B,S,N)
+    Cm = bcd[..., N:2 * N].astype(jnp.float32)
+    dt_raw = bcd[..., 2 * N:].astype(jnp.float32)      # (B,S,d)
+    delta = jax.nn.softplus(dt_raw + bp["m_dt_bias"])
+    A = -jnp.exp(bp["m_alog"])                         # (d, N)
+
+    def step(state, inp):
+        x_t, B_t, C_t, dl_t = inp                      # (B,d),(B,N),(B,N),(B,d)
+        dA = jnp.exp(dl_t[..., None] * A)              # (B,d,N)
+        dBx = dl_t[..., None] * B_t[:, None, :] * x_t[..., None]
+        state = state * dA + dBx
+        y = jnp.einsum("bdn,bn->bd", state, C_t)
+        return state, y
+
+    if ssm_state is None:
+        ssm_state = jnp.zeros((B, d, N), jnp.float32)
+    ssm_state, ys = chunked_scan(
+        step, ssm_state,
+        (xc.swapaxes(0, 1), Bm.swapaxes(0, 1), Cm.swapaxes(0, 1),
+         delta.swapaxes(0, 1)), cfg.ssm_chunk)
+    y = ys.swapaxes(0, 1) + xc * bp["m_d"]
+    y = y * jax.nn.silu(z.astype(jnp.float32))
+    out = jnp.einsum("bsd,de->bse", y.astype(h.dtype), bp["m_out"])
+    return out, new_conv_state, ssm_state
+
+
+def _block(cfg, bp, x, positions, kv=None, pos=None):
+    """Parallel attn + mamba. kv/pos given -> decode mode (S==1)."""
+    B, S, d = x.shape
+    h = rms_norm(x, bp["ln1"], cfg.norm_eps)
+    q, k, v = _project_qkv(cfg, bp, h, positions)
+    if kv is None:
+        a_out = attn.attention(q, k, v, causal=True,
+                               window=cfg.hymba_window)
+        new_kv = (k, v)
+    else:
+        kc, vc, slot, w = kv
+        kc = lax.dynamic_update_slice_in_dim(kc, k, slot, axis=1)
+        vc = lax.dynamic_update_slice_in_dim(vc, v, slot, axis=1)
+        ages = (slot - jnp.arange(w)) % w
+        abs_idx = pos - ages
+        s = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32),
+                       attn._expand_kv(kc, cfg.n_heads)
+                       .astype(jnp.float32)) / jnp.sqrt(cfg.hd)
+        ok = (abs_idx >= 0) & (abs_idx <= pos) & (abs_idx > pos - w)
+        s = jnp.where(ok[None, None, None], s, attn.NEG_INF)
+        p = jax.nn.softmax(s, -1)
+        a_out = jnp.einsum("bhqk,bkhd->bqhd", p,
+                           attn._expand_kv(vc, cfg.n_heads)
+                           .astype(jnp.float32)).astype(q.dtype)
+        new_kv = (kc, vc)
+    a_out = jnp.einsum("bsh,hd->bsd", a_out.reshape(B, S, -1), bp["wo"])
+    a_out = rms_norm(a_out, bp["attn_norm"], cfg.norm_eps)
+    return h, a_out, new_kv
+
+
+def forward(cfg: ModelConfig, params, tokens, positions=None,
+            prefix_embeds=None) -> jax.Array:
+    x = embed_tokens(params["embed"], tokens,
+                     jnp.dtype(cfg.compute_dtype))
+    B, S, _ = x.shape
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+
+    def body(carry, bp):
+        from repro.models.shardctx import constrain_batch
+        x = constrain_batch(carry)
+        h, a_out, _ = _block(cfg, bp, x, positions)
+        m_out, _, _ = _mamba_scan(cfg, bp, h)
+        m_out = rms_norm(m_out, bp["mamba_norm"], cfg.norm_eps)
+        x = x + 0.5 * (a_out + m_out)
+        h2 = rms_norm(x, bp["ln2"], cfg.norm_eps)
+        x = x + swiglu(h2, bp["w_gate"], bp["w_up"], bp["w_down"])
+        return x, None
+
+    x, _ = lax.scan(body, x, params["blocks"])
+    return rms_norm(x, params["final_norm"], cfg.norm_eps)
+
+
+def loss_fn(cfg: ModelConfig, params, batch) -> jax.Array:
+    h = forward(cfg, params, batch["tokens"])
+    return chunked_softmax_xent(h, params["lm_head"], batch["labels"],
+                                chunk=cfg.logits_chunk)
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int) -> dict:
+    L, d, N = cfg.n_layers, cfg.d_model, cfg.ssm_state
+    KV, hd = cfg.n_kv_heads, cfg.hd
+    w = cfg.hymba_window
+    dt = jnp.dtype(cfg.compute_dtype)
+    return {
+        "k": jnp.zeros((L, batch, w, KV, hd), dt),
+        "v": jnp.zeros((L, batch, w, KV, hd), dt),
+        "conv": jnp.zeros((L, batch, 3, d), dt),
+        "ssm": jnp.zeros((L, batch, d, N), jnp.float32),
+    }
+
+
+def decode_step(cfg: ModelConfig, params, cache, tokens, pos):
+    B = tokens.shape[0]
+    x = embed_tokens(params["embed"], tokens,
+                     jnp.dtype(cfg.compute_dtype))
+    w = cache["k"].shape[2]
+    positions = jnp.broadcast_to(pos, (B, 1))
+    slot = pos % w
+
+    def body(carry, inp):
+        x = carry
+        bp, kc, vc, conv, ssm = inp
+        h, a_out, (kc, vc) = _block(cfg, bp, x, positions,
+                                    kv=(kc, vc, slot, w), pos=pos)
+        m_out, conv, ssm = _mamba_scan(cfg, bp, h, conv_state=conv,
+                                       ssm_state=ssm)
+        m_out = rms_norm(m_out, bp["mamba_norm"], cfg.norm_eps)
+        x = x + 0.5 * (a_out + m_out)
+        h2 = rms_norm(x, bp["ln2"], cfg.norm_eps)
+        x = x + swiglu(h2, bp["w_gate"], bp["w_up"], bp["w_down"])
+        return x, (kc, vc, conv, ssm)
+
+    x, (kc, vc, conv, ssm) = lax.scan(
+        body, x, (params["blocks"], cache["k"], cache["v"],
+                  cache["conv"], cache["ssm"]))
+    cache = {"k": kc, "v": vc, "conv": conv, "ssm": ssm}
+    x = rms_norm(x[:, 0], params["final_norm"], cfg.norm_eps)
+    logits = jnp.einsum("bd,dv->bv", x.astype(jnp.float32),
+                        params["lm_head"].astype(jnp.float32))
+    return logits, cache
+
+
+def prefill(cfg: ModelConfig, params, tokens):
+    B, S = tokens.shape
+    x = embed_tokens(params["embed"], tokens,
+                     jnp.dtype(cfg.compute_dtype))
+    positions = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+    w = cfg.hymba_window
+    keep = min(S, w)
+    slots = (jnp.arange(S - keep, S) % w)   # ring slots of the kept tail
+
+    def body(carry, bp):
+        x = carry
+        h, a_out, (k, v) = _block(cfg, bp, x, positions)
+        m_out, conv, ssm = _mamba_scan(cfg, bp, h)
+        m_out = rms_norm(m_out, bp["mamba_norm"], cfg.norm_eps)
+        x = x + 0.5 * (a_out + m_out)
+        h2 = rms_norm(x, bp["ln2"], cfg.norm_eps)
+        x = x + swiglu(h2, bp["w_gate"], bp["w_up"], bp["w_down"])
+        kc = jnp.zeros((B, w) + k.shape[2:], k.dtype) \
+            .at[:, slots].set(k[:, -keep:])
+        vc = jnp.zeros((B, w) + v.shape[2:], v.dtype) \
+            .at[:, slots].set(v[:, -keep:])
+        return x, (kc, vc, conv, ssm)
+
+    x, (kc, vc, conv, ssm) = lax.scan(body, x, params["blocks"])
+    cache = {"k": kc, "v": vc, "conv": conv, "ssm": ssm}
+    x = rms_norm(x[:, -1], params["final_norm"], cfg.norm_eps)
+    logits = jnp.einsum("bd,dv->bv", x.astype(jnp.float32),
+                        params["lm_head"].astype(jnp.float32))
+    return logits, cache

@@ -1,0 +1,123 @@
+"""Mixture-of-Experts FFN: top-k routing with sort-based dropping dispatch.
+
+Used by arctic-480b (128 experts top-2 + dense residual) and phi3.5-moe
+(16 experts top-2). The dispatch is capacity-bounded (capacity_factor) and
+gather/scatter based - FLOPs scale with top_k, not n_experts, and under
+expert parallelism the gather/scatter lowers to all_to_all-style
+collectives on the model axis (visible in the roofline's collective term).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import ModelConfig
+from repro.models.common import init_dense
+
+
+def init_moe_params(cfg: ModelConfig, key, n_layers: int) -> dict:
+    d, f, E = cfg.d_model, cfg.d_ff, cfg.n_experts
+    ks = jax.random.split(key, 5)
+    dt = jnp.dtype(cfg.param_dtype)
+    L = n_layers
+    p = {
+        "router": init_dense(ks[0], (L, d, E), dtype=jnp.float32),
+        "e_gate": init_dense(ks[1], (L, E, d, f), dtype=dt),
+        "e_up": init_dense(ks[2], (L, E, d, f), dtype=dt),
+        "e_down": init_dense(ks[3], (L, E, f, d), dtype=dt),
+    }
+    if cfg.moe_dense_ff:
+        fd = cfg.moe_dense_ff
+        kk = jax.random.split(ks[4], 3)
+        p["d_gate"] = init_dense(kk[0], (L, d, fd), dtype=dt)
+        p["d_up"] = init_dense(kk[1], (L, d, fd), dtype=dt)
+        p["d_down"] = init_dense(kk[2], (L, fd, d), dtype=dt)
+    return p
+
+
+def moe_ffn(cfg: ModelConfig, x: jax.Array, bp: dict) -> jax.Array:
+    """x: (B, S, d) -> (B, S, d). bp holds this layer's expert weights."""
+    B, S, d = x.shape
+    E, k = cfg.n_experts, cfg.top_k
+
+    logits = jnp.einsum("bsd,de->bse", x.astype(jnp.float32),
+                        bp["router"])
+    gates = jax.nn.softmax(logits, axis=-1)
+    topv, topi = lax.top_k(gates, k)                     # (B, S, k)
+    topv = topv / jnp.maximum(topv.sum(-1, keepdims=True), 1e-9)
+
+    # Row-local dispatch: routing, scatter and combine happen within each
+    # batch row, so with the batch dim sharded over data the dispatch is
+    # entirely device-local - only the expert dim (sharded over model)
+    # touches the network, via the expert-weight einsums. (The naive
+    # global-token dispatch made GSPMD all-reduce the full buffer every
+    # layer: 8.2 TB/step measured on phi3.5-moe; see EXPERIMENTS.md SPerf.)
+    cap = max(int(round(cfg.capacity_factor * k * S / E)), 1)
+    Sk = S * k
+    flat_e = topi.reshape(B, Sk)
+    order = jnp.argsort(flat_e, axis=1, stable=True)
+    sorted_e = jnp.take_along_axis(flat_e, order, axis=1)
+    first = jax.vmap(
+        lambda se: jnp.searchsorted(se, se, side="left"))(sorted_e)
+    pos_in_e = jnp.arange(Sk)[None] - first
+    keep = pos_in_e < cap
+    pos_c = jnp.where(keep, pos_in_e, cap)               # cap = drop slot
+    token_of = order // k                                # (B, Sk)
+
+    from repro.models.shardctx import constrain, constrain_batch, \
+        get_batch_axes
+    from jax.sharding import PartitionSpec as P
+    # Expert-parallel mode (arctic: 128e) shards the expert dim of the
+    # dispatch buffers over 'model'; TP-inside-experts mode (phi: 16e)
+    # keeps them batch-sharded only (see train.step.param_pspec).
+    ep_mode = E >= 64
+    ba = get_batch_axes()
+
+    def _cst(t):
+        if not ba or ep_mode:
+            # EP mode: leave placement to GSPMD - measured better than
+            # forcing either batch- or expert-sharded dispatch buffers
+            # (EXPERIMENTS.md SPerf, arctic iterations).
+            return t
+        return constrain_batch(t)
+
+    bidx = jnp.arange(B)[:, None]
+    vals = jnp.take_along_axis(x, token_of[..., None], axis=1)
+    buf = jnp.zeros((B, E, cap + 1, d), x.dtype)
+    buf = buf.at[bidx, sorted_e, pos_c].set(
+        vals * keep[..., None].astype(x.dtype))
+    buf = _cst(buf)
+    eb = buf[:, :, :cap]
+
+    g = jnp.einsum("becd,edf->becf", eb, bp["e_gate"])
+    u = jnp.einsum("becd,edf->becf", eb, bp["e_up"])
+    out_e = jnp.einsum("becf,efd->becd", jax.nn.silu(g) * u,
+                       bp["e_down"])
+    out_e = _cst(out_e)
+    out_e = jnp.pad(out_e, ((0, 0), (0, 0), (0, 1), (0, 0)))
+    w = jnp.take_along_axis(topv.reshape(B, Sk), order, axis=1) \
+        .astype(x.dtype)
+    contrib = out_e[bidx, sorted_e, pos_c] * \
+        (w * keep.astype(x.dtype))[..., None]
+    y = jnp.zeros((B, S, d), x.dtype)
+    y = y.at[bidx, token_of].add(contrib)
+    out = y
+
+    if cfg.moe_dense_ff:
+        from repro.models.common import swiglu
+        out = out + swiglu(x, bp["d_gate"], bp["d_up"], bp["d_down"])
+    return out
+
+
+def aux_load_balance_loss(cfg: ModelConfig, x: jax.Array,
+                          router: jax.Array) -> jax.Array:
+    """Switch-style load-balancing auxiliary loss for one layer."""
+    T = x.shape[0] * x.shape[1]
+    logits = jnp.einsum("bsd,de->bse", x.astype(jnp.float32), router)
+    gates = jax.nn.softmax(logits, -1).reshape(T, -1)
+    topi = jnp.argmax(gates, -1)
+    frac_tokens = jnp.mean(
+        jax.nn.one_hot(topi, cfg.n_experts, dtype=jnp.float32), axis=0)
+    frac_probs = gates.mean(0)
+    return cfg.n_experts * jnp.sum(frac_tokens * frac_probs)

@@ -1,0 +1,47 @@
+"""Activation-sharding context for GSPMD scan bodies.
+
+Sharding does not reliably propagate into lax.scan carries (the layer
+stack), so without in-body constraints XLA may replicate the token
+dimension inside every layer - silently multiplying compute and memory by
+the data-parallel degree. The launch layer sets the batch axes here before
+building the program; model code calls constrain_batch on its scan
+carries. Outside a mesh context this is a no-op (single-device tests).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+_BATCH_AXES: Optional[tuple] = None
+
+
+def set_batch_axes(axes: Optional[tuple]) -> None:
+    global _BATCH_AXES
+    _BATCH_AXES = tuple(axes) if axes else None
+
+
+def get_batch_axes() -> Optional[tuple]:
+    return _BATCH_AXES
+
+
+def constrain_batch(x: jax.Array, extra_dims: Optional[int] = None):
+    """Constrain x's leading (batch) dim to the configured axes."""
+    if _BATCH_AXES is None:
+        return x
+    nd = (x.ndim - 1) if extra_dims is None else extra_dims
+    axes = _BATCH_AXES if len(_BATCH_AXES) > 1 else _BATCH_AXES[0]
+    try:
+        return jax.lax.with_sharding_constraint(x, P(axes, *([None] * nd)))
+    except Exception:
+        return x
+
+
+def constrain(x: jax.Array, spec: P):
+    if _BATCH_AXES is None:
+        return x
+    try:
+        return jax.lax.with_sharding_constraint(x, spec)
+    except Exception:
+        return x

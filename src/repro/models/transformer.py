@@ -1,0 +1,366 @@
+"""Dense decoder-only transformer: qwen3 / minicpm / internlm2 / gemma3 /
+qwen2-vl backbone. Layers are stacked and scanned (compile-time O(1) in
+depth); gemma3's 5:1 local:global attention is a per-layer boolean routed
+through the scan; decode uses full KV caches for global layers and rolling
+window caches for local layers.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+
+from repro.configs.base import ModelConfig
+from repro.models import attention as attn
+from repro.models.common import (apply_mrope, apply_rope,
+                                 chunked_softmax_xent, embed_tokens,
+                                 init_dense, rms_norm, swiglu)
+from repro.models.shardctx import constrain_batch
+
+
+def _pdt(cfg):
+    return jnp.dtype(cfg.param_dtype)
+
+
+def _cdt(cfg):
+    return jnp.dtype(cfg.compute_dtype)
+
+
+def layer_is_global(cfg: ModelConfig) -> np.ndarray:
+    if cfg.global_every <= 0:
+        return np.ones(cfg.n_layers, bool)
+    return np.array([(l + 1) % cfg.global_every == 0
+                     for l in range(cfg.n_layers)])
+
+
+# ----------------------------------------------------------------------------
+# parameters
+# ----------------------------------------------------------------------------
+
+def init_block_params(cfg: ModelConfig, key, n_layers: int,
+                      cross_attn: bool = False) -> dict:
+    hd, H, KV = cfg.hd, cfg.n_heads, cfg.n_kv_heads
+    d, f = cfg.d_model, cfg.d_ff
+    ks = jax.random.split(key, 12)
+    L = n_layers
+    dt = _pdt(cfg)
+
+    def W(i, shape):
+        return init_dense(ks[i], (L,) + shape, dtype=dt)
+
+    params = {
+        "ln1": jnp.zeros((L, d), dt),
+        "wq": W(0, (d, H * hd)),
+        "wk": W(1, (d, KV * hd)),
+        "wv": W(2, (d, KV * hd)),
+        "wo": W(3, (H * hd, d)),
+        "ln2": jnp.zeros((L, d), dt),
+        "w_gate": W(4, (d, f)),
+        "w_up": W(5, (d, f)),
+        "w_down": W(6, (f, d)),
+    }
+    if cfg.qk_norm:
+        params["q_norm"] = jnp.zeros((L, hd), dt)
+        params["k_norm"] = jnp.zeros((L, hd), dt)
+    if cross_attn:
+        params["ln_x"] = jnp.zeros((L, d), dt)
+        params["xq"] = W(7, (d, H * hd))
+        params["xk"] = W(8, (d, KV * hd))
+        params["xv"] = W(9, (d, KV * hd))
+        params["xo"] = W(10, (H * hd, d))
+    return params
+
+
+def init_params(cfg: ModelConfig, key) -> dict:
+    k_emb, k_blocks, k_head, k_moe = jax.random.split(key, 4)
+    dt = _pdt(cfg)
+    blocks = init_block_params(cfg, k_blocks, cfg.n_layers)
+    if cfg.n_experts > 0:
+        from repro.models.moe import init_moe_params
+        for name in ("w_gate", "w_up", "w_down"):
+            del blocks[name]
+        blocks.update(init_moe_params(cfg, k_moe, cfg.n_layers))
+    params = {
+        "embed": init_dense(k_emb, (cfg.vocab_size, cfg.d_model),
+                            scale=0.02, dtype=dt),
+        "blocks": blocks,
+        "final_norm": jnp.zeros((cfg.d_model,), dt),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = init_dense(k_head,
+                                       (cfg.d_model, cfg.vocab_size),
+                                       scale=0.02, dtype=dt)
+    return params
+
+
+def ffn_apply(cfg: ModelConfig, h: jax.Array, bp: dict) -> jax.Array:
+    """Dense SwiGLU or MoE FFN, keyed on the config."""
+    if cfg.n_experts > 0:
+        from repro.models.moe import moe_ffn
+        return moe_ffn(cfg, h, bp)
+    return swiglu(h, bp["w_gate"], bp["w_up"], bp["w_down"])
+
+
+def unembed_matrix(cfg: ModelConfig, params) -> jax.Array:
+    if cfg.tie_embeddings:
+        return params["embed"].T
+    return params["lm_head"]
+
+
+# ----------------------------------------------------------------------------
+# forward (training / prefill)
+# ----------------------------------------------------------------------------
+
+def _project_qkv(cfg, bp, x, positions):
+    B, S, d = x.shape
+    H, KV, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    q = jnp.einsum("bsd,dh->bsh", x, bp["wq"]).reshape(B, S, H, hd)
+    k = jnp.einsum("bsd,dh->bsh", x, bp["wk"]).reshape(B, S, KV, hd)
+    v = jnp.einsum("bsd,dh->bsh", x, bp["wv"]).reshape(B, S, KV, hd)
+    if cfg.qk_norm:
+        q = rms_norm(q, bp["q_norm"], cfg.norm_eps)
+        k = rms_norm(k, bp["k_norm"], cfg.norm_eps)
+    if cfg.mrope:
+        q = apply_mrope(q, positions, cfg.rope_theta)
+        k = apply_mrope(k, positions, cfg.rope_theta)
+    else:
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def dense_block(cfg: ModelConfig, x, bp, positions, is_global,
+                causal: bool = True):
+    B, S, d = x.shape
+    h = rms_norm(x, bp["ln1"], cfg.norm_eps)
+    q, k, v = _project_qkv(cfg, bp, h, positions)
+    if cfg.global_every > 0:
+        # lax.cond keeps both paths compiled once inside the layer scan.
+        out = lax.cond(
+            is_global,
+            lambda ops: attn.attention(*ops, causal=causal, window=0),
+            lambda ops: attn.attention(*ops, causal=causal,
+                                       window=cfg.local_window),
+            (q, k, v))
+    else:
+        out = attn.attention(q, k, v, causal=causal)
+    x = x + jnp.einsum("bsh,hd->bsd", out.reshape(B, S, -1), bp["wo"])
+    h = rms_norm(x, bp["ln2"], cfg.norm_eps)
+    x = x + ffn_apply(cfg, h, bp)
+    return x
+
+
+def forward(cfg: ModelConfig, params, tokens, positions=None,
+            prefix_embeds: Optional[jax.Array] = None) -> jax.Array:
+    """tokens: (B, S) -> hidden states (B, S_total, d)."""
+    x = embed_tokens(params["embed"], tokens, _cdt(cfg))
+    if prefix_embeds is not None:
+        x = jnp.concatenate([prefix_embeds.astype(x.dtype), x], axis=1)
+    B, S, _ = x.shape
+    if positions is None:
+        pos1 = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+        positions = jnp.stack([pos1] * 3, -1) if cfg.mrope else pos1
+    is_glob = jnp.asarray(layer_is_global(cfg))
+
+    block = functools.partial(dense_block, cfg)
+    if cfg.remat == "full":
+        block = jax.checkpoint(block, static_argnums=())
+    elif cfg.remat == "dots":
+        block = jax.checkpoint(
+            block, policy=jax.checkpoint_policies.checkpoint_dots)
+
+    if cfg.scan_layers:
+        def body(carry, inp):
+            bp, ig = inp
+            carry = constrain_batch(carry)
+            return block(carry, bp, positions, ig), None
+        x, _ = lax.scan(body, x, (params["blocks"], is_glob))
+    else:
+        for l in range(cfg.n_layers):
+            bp = jax.tree.map(lambda a: a[l], params["blocks"])
+            x = block(x, bp, positions, is_glob[l])
+    return rms_norm(x, params["final_norm"], cfg.norm_eps)
+
+
+def loss_fn(cfg: ModelConfig, params, batch) -> jax.Array:
+    """batch: {tokens (B,S), labels (B,S), [positions], [prefix_embeds]}."""
+    h = forward(cfg, params, batch["tokens"], batch.get("positions"),
+                batch.get("prefix_embeds"))
+    labels = batch["labels"]
+    if batch.get("prefix_embeds") is not None:
+        npfx = batch["prefix_embeds"].shape[1]
+        pad = jnp.full(labels.shape[:1] + (npfx,), -100, labels.dtype)
+        labels = jnp.concatenate([pad, labels], axis=1)
+    return chunked_softmax_xent(h, unembed_matrix(cfg, params), labels,
+                                chunk=cfg.logits_chunk)
+
+
+# ----------------------------------------------------------------------------
+# decode (serve): full caches for global layers, rolling for local
+# ----------------------------------------------------------------------------
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int) -> dict:
+    KV, hd = cfg.n_kv_heads, cfg.hd
+    dt = _cdt(cfg)
+    is_glob = layer_is_global(cfg)
+    n_glob, n_loc = int(is_glob.sum()), int((~is_glob).sum())
+    w = cfg.local_window
+    cache = {
+        "k_glob": jnp.zeros((max(n_glob, 1), batch, max_len, KV, hd), dt),
+        "v_glob": jnp.zeros((max(n_glob, 1), batch, max_len, KV, hd), dt),
+    }
+    if n_loc:
+        cache["k_loc"] = jnp.zeros((n_loc, batch, w, KV, hd), dt)
+        cache["v_loc"] = jnp.zeros((n_loc, batch, w, KV, hd), dt)
+    return cache
+
+
+def _cache_index_maps(cfg):
+    is_glob = layer_is_global(cfg)
+    gi, li, g, l = [], [], 0, 0
+    for flag in is_glob:
+        gi.append(g if flag else 0)
+        li.append(l if not flag else 0)
+        g += int(flag)
+        l += int(not flag)
+    return (jnp.asarray(is_glob), jnp.asarray(gi, jnp.int32),
+            jnp.asarray(li, jnp.int32))
+
+
+def decode_step(cfg: ModelConfig, params, cache, tokens, pos):
+    """One decode step. tokens: (B, 1); pos: scalar position (int32).
+
+    Returns (logits (B, V), new_cache). The cache for local layers is a
+    rolling window indexed pos % window.
+    """
+    B = tokens.shape[0]
+    H, KV, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    x = embed_tokens(params["embed"], tokens, _cdt(cfg))
+    pos_b = jnp.broadcast_to(pos, (B, 1))
+    positions = jnp.stack([pos_b] * 3, -1) if cfg.mrope else pos_b
+    is_glob, gmap, lmap = _cache_index_maps(cfg)
+    has_loc = "k_loc" in cache
+    w = cache["k_loc"].shape[2] if has_loc else 0
+
+    def body(carry, inp):
+        x, cache = carry
+        x = constrain_batch(x)
+        bp, ig, gidx, lidx = inp
+        h = rms_norm(x, bp["ln1"], cfg.norm_eps)
+        q, k, v = _project_qkv(cfg, bp, h, positions)
+
+        def glob_path(cache):
+            kc = lax.dynamic_update_slice_in_dim(
+                cache["k_glob"][gidx], k, pos, axis=1)
+            vc = lax.dynamic_update_slice_in_dim(
+                cache["v_glob"][gidx], v, pos, axis=1)
+            out = attn.decode_attention(q, kc, vc, pos)
+            cache = dict(cache)
+            cache["k_glob"] = cache["k_glob"].at[gidx].set(kc)
+            cache["v_glob"] = cache["v_glob"].at[gidx].set(vc)
+            return out, cache
+
+        def loc_path(cache):
+            slot = pos % w
+            kc = lax.dynamic_update_slice_in_dim(
+                cache["k_loc"][lidx], k, slot, axis=1)
+            vc = lax.dynamic_update_slice_in_dim(
+                cache["v_loc"][lidx], v, slot, axis=1)
+            # positions of ring slots: slot s holds absolute index
+            # pos - ((slot - s) mod w)
+            ages = (slot - jnp.arange(w)) % w
+            abs_idx = pos - ages
+            s = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32),
+                           attn._expand_kv(kc, H).astype(jnp.float32)) \
+                / jnp.sqrt(hd)
+            ok = (abs_idx >= 0) & (abs_idx <= pos) & (abs_idx > pos - w)
+            s = jnp.where(ok[None, None, None], s, attn.NEG_INF)
+            prob = jax.nn.softmax(s, axis=-1)
+            out = jnp.einsum("bhqk,bkhd->bqhd", prob,
+                             attn._expand_kv(vc, H).astype(jnp.float32)
+                             ).astype(q.dtype)
+            cache = dict(cache)
+            cache["k_loc"] = cache["k_loc"].at[lidx].set(kc)
+            cache["v_loc"] = cache["v_loc"].at[lidx].set(vc)
+            return out, cache
+
+        if has_loc:
+            out, cache = lax.cond(ig, glob_path, loc_path, cache)
+        else:
+            out, cache = glob_path(cache)
+        x = x + jnp.einsum("bsh,hd->bsd", out.reshape(B, 1, -1), bp["wo"])
+        h = rms_norm(x, bp["ln2"], cfg.norm_eps)
+        x = x + ffn_apply(cfg, h, bp)
+        return (x, cache), None
+
+    (x, cache), _ = lax.scan(
+        body, (x, cache),
+        (params["blocks"], is_glob, gmap, lmap))
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = jnp.einsum("bsd,dv->bsv", x.astype(jnp.float32),
+                        unembed_matrix(cfg, params).astype(jnp.float32))
+    return logits[:, 0], cache
+
+
+def prefill(cfg: ModelConfig, params, tokens) -> tuple[jax.Array, dict]:
+    """Full-sequence forward that also fills the KV cache.
+
+    Returns (last-token logits (B, V), cache positioned at S)."""
+    B, S = tokens.shape
+    x = embed_tokens(params["embed"], tokens, _cdt(cfg))
+    pos1 = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+    positions = jnp.stack([pos1] * 3, -1) if cfg.mrope else pos1
+    is_glob, gmap, lmap = _cache_index_maps(cfg)
+    cache = init_cache(cfg, B, S)
+    has_loc = "k_loc" in cache
+    w = cache["k_loc"].shape[2] if has_loc else 0
+
+    def body(carry, inp):
+        x, cache = carry
+        x = constrain_batch(x)
+        bp, ig, gidx, lidx = inp
+        h = rms_norm(x, bp["ln1"], cfg.norm_eps)
+        q, k, v = _project_qkv(cfg, bp, h, positions)
+
+        def glob_path(cache):
+            out = attn.attention(q, k, v, causal=True)
+            cache = dict(cache)
+            cache["k_glob"] = cache["k_glob"].at[gidx].set(k)
+            cache["v_glob"] = cache["v_glob"].at[gidx].set(v)
+            return out, cache
+
+        def loc_path(cache):
+            out = attn.attention(q, k, v, causal=True,
+                                 window=cfg.local_window)
+            cache = dict(cache)
+            if has_loc:
+                # scatter the trailing window into its ring slots
+                keep = min(S, w)
+                slots = jnp.arange(S - keep, S) % w
+                tail_k = jnp.zeros((B, w) + k.shape[2:], k.dtype) \
+                    .at[:, slots].set(k[:, -keep:])
+                tail_v = jnp.zeros((B, w) + v.shape[2:], v.dtype) \
+                    .at[:, slots].set(v[:, -keep:])
+                cache["k_loc"] = cache["k_loc"].at[lidx].set(tail_k)
+                cache["v_loc"] = cache["v_loc"].at[lidx].set(tail_v)
+            return out, cache
+
+        if has_loc:
+            out, cache = lax.cond(ig, glob_path, loc_path, cache)
+        else:
+            out, cache = glob_path(cache)
+        x = x + jnp.einsum("bsh,hd->bsd", out.reshape(B, S, -1), bp["wo"])
+        h = rms_norm(x, bp["ln2"], cfg.norm_eps)
+        x = x + ffn_apply(cfg, h, bp)
+        return (x, cache), None
+
+    (x, cache), _ = lax.scan(
+        body, (x, cache), (params["blocks"], is_glob, gmap, lmap))
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = jnp.einsum("bd,dv->bv", x[:, -1].astype(jnp.float32),
+                        unembed_matrix(cfg, params).astype(jnp.float32))
+    return logits, cache

@@ -1,0 +1,180 @@
+"""Whisper-style encoder-decoder backbone.
+
+The conv audio frontend is a STUB per the assignment: inputs provide
+precomputed frame embeddings (B, n_audio_frames, d) - what the two conv
+layers would produce from the mel spectrogram. The transformer backbone
+(bidirectional encoder, causal decoder with cross-attention) is complete.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import ModelConfig
+from repro.models import attention as attn
+from repro.models.common import (chunked_softmax_xent, embed_tokens,
+                                 init_dense, rms_norm, swiglu)
+from repro.models.transformer import init_block_params, _project_qkv
+
+
+def init_params(cfg: ModelConfig, key) -> dict:
+    ks = jax.random.split(key, 6)
+    dt = jnp.dtype(cfg.param_dtype)
+    d = cfg.d_model
+    return {
+        "embed": init_dense(ks[0], (cfg.vocab_size, d), scale=0.02,
+                            dtype=dt),
+        "pos_embed": init_dense(ks[1], (cfg.n_audio_frames, d),
+                                scale=0.02, dtype=dt),
+        "enc_blocks": init_block_params(cfg, ks[2], cfg.encoder_layers),
+        "enc_norm": jnp.zeros((d,), dt),
+        "dec_blocks": init_block_params(cfg, ks[3], cfg.n_layers,
+                                        cross_attn=True),
+        "final_norm": jnp.zeros((d,), dt),
+        "lm_head": init_dense(ks[4], (d, cfg.vocab_size), scale=0.02,
+                              dtype=dt),
+    }
+
+
+def encode(cfg: ModelConfig, params, frames: jax.Array) -> jax.Array:
+    """frames: (B, F, d) stubbed conv output -> encoder states (B, F, d)."""
+    B, F, d = frames.shape
+    x = frames.astype(jnp.dtype(cfg.compute_dtype)) \
+        + params["pos_embed"][None, :F].astype(frames.dtype)
+    positions = jnp.broadcast_to(jnp.arange(F)[None], (B, F))
+
+    def body(carry, bp):
+        from repro.models.shardctx import constrain_batch
+        x = constrain_batch(carry)
+        h = rms_norm(x, bp["ln1"], cfg.norm_eps)
+        q, k, v = _project_qkv(cfg, bp, h, positions)
+        out = attn.attention(q, k, v, causal=False)
+        x = x + jnp.einsum("bsh,hd->bsd", out.reshape(B, F, -1), bp["wo"])
+        h = rms_norm(x, bp["ln2"], cfg.norm_eps)
+        x = x + swiglu(h, bp["w_gate"], bp["w_up"], bp["w_down"])
+        return x, None
+
+    x, _ = lax.scan(body, x, params["enc_blocks"])
+    return rms_norm(x, params["enc_norm"], cfg.norm_eps)
+
+
+def _decoder_block(cfg, bp, x, positions, enc, self_out):
+    """Shared decoder block body; self_out is the self-attn result."""
+    B, S, d = x.shape
+    x = x + jnp.einsum("bsh,hd->bsd", self_out.reshape(B, S, -1),
+                       bp["wo"])
+    # cross attention
+    h = rms_norm(x, bp["ln_x"], cfg.norm_eps)
+    H, KV, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    q = jnp.einsum("bsd,dh->bsh", h, bp["xq"]).reshape(B, S, H, hd)
+    k = jnp.einsum("bfd,dh->bfh", enc, bp["xk"]).reshape(
+        B, enc.shape[1], KV, hd)
+    v = jnp.einsum("bfd,dh->bfh", enc, bp["xv"]).reshape(
+        B, enc.shape[1], KV, hd)
+    out = attn.attention(q, k, v, causal=False)
+    x = x + jnp.einsum("bsh,hd->bsd", out.reshape(B, S, -1), bp["xo"])
+    h = rms_norm(x, bp["ln2"], cfg.norm_eps)
+    return x + swiglu(h, bp["w_gate"], bp["w_up"], bp["w_down"])
+
+
+def forward(cfg: ModelConfig, params, tokens, frames) -> jax.Array:
+    """Teacher-forced decoder over encoder(frames)."""
+    enc = encode(cfg, params, frames)
+    B, S = tokens.shape
+    x = embed_tokens(params["embed"], tokens,
+                     jnp.dtype(cfg.compute_dtype))
+    positions = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+
+    def body(carry, bp):
+        from repro.models.shardctx import constrain_batch
+        x = constrain_batch(carry)
+        h = rms_norm(x, bp["ln1"], cfg.norm_eps)
+        q, k, v = _project_qkv(cfg, bp, h, positions)
+        self_out = attn.attention(q, k, v, causal=True)
+        return _decoder_block(cfg, bp, x, positions, enc, self_out), None
+
+    x, _ = lax.scan(body, x, params["dec_blocks"])
+    return rms_norm(x, params["final_norm"], cfg.norm_eps)
+
+
+def loss_fn(cfg: ModelConfig, params, batch) -> jax.Array:
+    h = forward(cfg, params, batch["tokens"], batch["frames"])
+    return chunked_softmax_xent(h, params["lm_head"], batch["labels"],
+                                chunk=cfg.logits_chunk)
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int) -> dict:
+    KV, hd, L = cfg.n_kv_heads, cfg.hd, cfg.n_layers
+    dt = jnp.dtype(cfg.compute_dtype)
+    F = cfg.n_audio_frames
+    return {
+        "k": jnp.zeros((L, batch, max_len, KV, hd), dt),
+        "v": jnp.zeros((L, batch, max_len, KV, hd), dt),
+        "xk": jnp.zeros((L, batch, F, KV, hd), dt),
+        "xv": jnp.zeros((L, batch, F, KV, hd), dt),
+    }
+
+
+def prefill(cfg: ModelConfig, params, tokens, frames):
+    """Encode audio, run the decoder prompt, fill self+cross caches."""
+    enc = encode(cfg, params, frames)
+    B, S = tokens.shape
+    H, KV, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    x = embed_tokens(params["embed"], tokens,
+                     jnp.dtype(cfg.compute_dtype))
+    positions = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+
+    def body(carry, bp):
+        x = carry
+        h = rms_norm(x, bp["ln1"], cfg.norm_eps)
+        q, k, v = _project_qkv(cfg, bp, h, positions)
+        self_out = attn.attention(q, k, v, causal=True)
+        xk = jnp.einsum("bfd,dh->bfh", enc, bp["xk"]).reshape(
+            B, enc.shape[1], KV, hd)
+        xv = jnp.einsum("bfd,dh->bfh", enc, bp["xv"]).reshape(
+            B, enc.shape[1], KV, hd)
+        x = _decoder_block(cfg, bp, x, positions, enc, self_out)
+        return x, (k, v, xk, xv)
+
+    x, (k, v, xk, xv) = lax.scan(body, x, params["dec_blocks"])
+    cache = {"k": k, "v": v, "xk": xk, "xv": xv}
+    x = rms_norm(x[:, -1], params["final_norm"], cfg.norm_eps)
+    logits = jnp.einsum("bd,dv->bv", x.astype(jnp.float32),
+                        params["lm_head"].astype(jnp.float32))
+    return logits, cache
+
+
+def decode_step(cfg: ModelConfig, params, cache, tokens, pos):
+    B = tokens.shape[0]
+    H, KV, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    x = embed_tokens(params["embed"], tokens,
+                     jnp.dtype(cfg.compute_dtype))
+    positions = jnp.broadcast_to(pos, (B, 1))
+
+    def body(carry, inp):
+        x = carry
+        bp, kc, vc, xk, xv = inp
+        h = rms_norm(x, bp["ln1"], cfg.norm_eps)
+        q, k, v = _project_qkv(cfg, bp, h, positions)
+        kc = lax.dynamic_update_slice_in_dim(kc, k, pos, axis=1)
+        vc = lax.dynamic_update_slice_in_dim(vc, v, pos, axis=1)
+        self_out = attn.decode_attention(q, kc, vc, pos)
+        x = x + jnp.einsum("bsh,hd->bsd",
+                           self_out.reshape(B, 1, -1), bp["wo"])
+        h = rms_norm(x, bp["ln_x"], cfg.norm_eps)
+        q2 = jnp.einsum("bsd,dh->bsh", h, bp["xq"]).reshape(B, 1, H, hd)
+        out = attn.decode_attention(q2, xk, xv, xk.shape[1] - 1)
+        x = x + jnp.einsum("bsh,hd->bsd", out.reshape(B, 1, -1), bp["xo"])
+        h = rms_norm(x, bp["ln2"], cfg.norm_eps)
+        x = x + swiglu(h, bp["w_gate"], bp["w_up"], bp["w_down"])
+        return x, (kc, vc)
+
+    x, (kc, vc) = lax.scan(
+        body, x, (params["dec_blocks"], cache["k"], cache["v"],
+                  cache["xk"], cache["xv"]))
+    cache = dict(cache, k=kc, v=vc)
+    x = rms_norm(x[:, 0], params["final_norm"], cfg.norm_eps)
+    logits = jnp.einsum("bd,dv->bv", x.astype(jnp.float32),
+                        params["lm_head"].astype(jnp.float32))
+    return logits, cache

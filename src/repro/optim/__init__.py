@@ -1,0 +1,7 @@
+from repro.optim.adamw import (AdamWConfig, clip_by_global_norm,
+                               global_norm, init_state, update)
+from repro.optim.schedules import constant, cosine, warmup_stable_decay
+
+__all__ = ["AdamWConfig", "init_state", "update", "global_norm",
+           "clip_by_global_norm", "warmup_stable_decay", "cosine",
+           "constant"]

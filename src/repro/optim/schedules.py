@@ -1,0 +1,40 @@
+"""LR schedules: WSD (Warmup-Stable-Decay, MiniCPM arXiv:2404.06395),
+cosine, and linear warmup helpers. All are step -> lr callables usable
+under jit (jnp arithmetic only).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def warmup_stable_decay(peak_lr: float, warmup: int, stable: int,
+                        decay: int, final_frac: float = 0.1):
+    """MiniCPM's WSD: linear warmup, long stable plateau, short decay."""
+    def lr(step):
+        step = jnp.asarray(step, jnp.float32)
+        w = peak_lr * jnp.minimum(step / jnp.maximum(warmup, 1), 1.0)
+        in_decay = step > (warmup + stable)
+        t = jnp.clip((step - warmup - stable) / jnp.maximum(decay, 1),
+                     0.0, 1.0)
+        decayed = peak_lr * (final_frac ** t)
+        return jnp.where(in_decay, decayed, w)
+    return lr
+
+
+def cosine(peak_lr: float, warmup: int, total: int,
+           final_frac: float = 0.1):
+    def lr(step):
+        step = jnp.asarray(step, jnp.float32)
+        w = peak_lr * jnp.minimum(step / jnp.maximum(warmup, 1), 1.0)
+        t = jnp.clip((step - warmup) / jnp.maximum(total - warmup, 1),
+                     0.0, 1.0)
+        c = peak_lr * (final_frac + (1 - final_frac)
+                       * 0.5 * (1 + jnp.cos(jnp.pi * t)))
+        return jnp.where(step < warmup, w, c)
+    return lr
+
+
+def constant(lr_value: float):
+    def lr(step):
+        return jnp.full((), lr_value, jnp.float32)
+    return lr

@@ -1,0 +1,2 @@
+from repro.roofline.analysis import (Roofline, PEAK_FLOPS, HBM_BW, ICI_BW)
+from repro.roofline.hlo_parse import HloAnalysis, analyze_hlo

@@ -1,0 +1,93 @@
+"""Roofline terms from compiled dry-run artifacts.
+
+Hardware model (TPU v5e target):
+  peak bf16 compute : 197 TFLOP/s per chip
+  HBM bandwidth     : 819 GB/s per chip
+  ICI link bandwidth: ~50 GB/s per link
+
+  compute term    = HLO_FLOPs / peak
+  memory term     = HLO_bytes / HBM_bw
+  collective term = collective_bytes / link_bw
+
+All three inputs come from repro.roofline.hlo_parse (loop-trip-aware
+analysis of compiled.as_text(); see that module).
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Optional
+
+PEAK_FLOPS = 197e12          # bf16 / chip
+HBM_BW = 819e9               # bytes/s / chip
+ICI_BW = 50e9                # bytes/s/link
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+@dataclasses.dataclass
+class Roofline:
+    flops: float                  # per device
+    bytes_hbm: float              # per device
+    bytes_collective: float       # per device
+    model_flops: float            # 6*N*D (active params), whole step
+    chips: int
+
+    @property
+    def t_compute(self) -> float:
+        return self.flops / PEAK_FLOPS
+
+    @property
+    def t_memory(self) -> float:
+        return self.bytes_hbm / HBM_BW
+
+    @property
+    def t_collective(self) -> float:
+        return self.bytes_collective / ICI_BW
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.t_compute, "memory": self.t_memory,
+                 "collective": self.t_collective}
+        return max(terms, key=terms.get)
+
+    @property
+    def bound_time(self) -> float:
+        return max(self.t_compute, self.t_memory, self.t_collective)
+
+    @property
+    def useful_flops_fraction(self) -> float:
+        """MODEL_FLOPS / (HLO_FLOPs * chips): remat/redundancy waste."""
+        total = self.flops * self.chips
+        return self.model_flops / total if total else 0.0
+
+    @property
+    def roofline_fraction(self) -> float:
+        """Fraction of the roofline the step achieves if it runs exactly at
+        the binding resource: useful model FLOPs per second at bound_time
+        over the chips' peak."""
+        if self.bound_time == 0:
+            return 0.0
+        achieved = self.model_flops / self.bound_time / self.chips
+        return achieved / PEAK_FLOPS
+
+    def to_dict(self) -> dict:
+        return {
+            "flops_per_device": self.flops,
+            "hbm_bytes_per_device": self.bytes_hbm,
+            "collective_bytes_per_device": self.bytes_collective,
+            "model_flops": self.model_flops,
+            "chips": self.chips,
+            "t_compute_s": self.t_compute,
+            "t_memory_s": self.t_memory,
+            "t_collective_s": self.t_collective,
+            "dominant": self.dominant,
+            "useful_flops_fraction": self.useful_flops_fraction,
+            "roofline_fraction": self.roofline_fraction,
+        }

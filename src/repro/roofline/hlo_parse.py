@@ -1,0 +1,319 @@
+"""Post-optimization HLO text analysis with loop-trip multipliers.
+
+The CPU backend's compiled.cost_analysis() counts while-loop bodies ONCE,
+which under-reports every lax.scan (layers, microbatches, attention/loss
+chunks) by its trip count. This module re-derives the roofline inputs from
+compiled.as_text():
+
+  * computations are split brace-aware; `calls=`/`body=`/`condition=`
+    edges build the call graph;
+  * each while's trip count is recovered from the constant in its
+    condition computation (scan loops compare an induction var against a
+    constant);
+  * multiplier(comp) = product of trip counts on the call path;
+  * FLOPs: 2 * prod(result_shape) * K for every dot (K from
+    lhs_contracting_dims and the operand symbol table);
+  * HBM bytes: sum of result+operand buffer bytes of every top-level op in
+    non-fused computations (fusion internals touch no HBM);
+  * collective bytes: operand bytes of all-gather / all-reduce /
+    reduce-scatter / all-to-all / collective-permute ops.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from collections import defaultdict
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "bf16": 2, "f16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8,
+    "f64": 8, "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_SHAPE_RE = re.compile(r"\b(" + "|".join(_DTYPE_BYTES) + r")\[([\d,]*)\]")
+_DEF_RE = re.compile(r"^(?:ROOT\s+)?%([\w\.\-]+)\s*=\s*(.*)$")
+_OPND_RE = re.compile(r"%([\w\.\-]+)")
+
+FREE_OPS = ("tuple(", "get-tuple-element(", "parameter(", "constant(",
+            "bitcast(", "copy(", "after-all(", "partition-id(")
+
+
+def _shapes_bytes(text: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(text):
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _first_shape(text: str):
+    m = _SHAPE_RE.search(text)
+    if not m:
+        return None
+    dt, dims = m.groups()
+    shape = [int(d) for d in dims.split(",")] if dims else []
+    return dt, shape
+
+
+@dataclasses.dataclass
+class HloAnalysis:
+    flops: float
+    hbm_bytes: float
+    collective_bytes: float
+    collective_by_kind: dict
+    n_collectives: int
+    trip_counts: dict
+    warnings: list
+
+
+def analyze_hlo(text: str) -> HloAnalysis:
+    # --- split into computations (computations are never nested) --------
+    comps: dict[str, list[str]] = {}
+    headers: dict[str, str] = {}
+    cur = None
+    for raw in text.splitlines():
+        line = raw.rstrip()
+        stripped = line.strip()
+        if not stripped or stripped.startswith("//"):
+            continue
+        if stripped.endswith("{") and (stripped.startswith("%")
+                                       or stripped.startswith("ENTRY")):
+            name = stripped.split()[0 if not stripped.startswith("ENTRY")
+                                    else 1].lstrip("%")
+            cur = name
+            comps[cur] = []
+            headers[cur] = stripped
+        elif stripped == "}" or stripped.startswith("} "):
+            cur = None
+        elif cur is not None:
+            comps[cur].append(stripped)
+
+    warnings: list[str] = []
+
+    # --- symbol tables: value name -> "dtype[shape]" string -------------
+    symtab: dict[str, dict[str, str]] = {}
+    for cname, lines in comps.items():
+        tab: dict[str, str] = {}
+        hdr = headers[cname]
+        # parameters in the header: "pname: dtype[shape]"
+        for pm in re.finditer(r"([\w\.\-]+)\s*:\s*([^,()]+[\]\}])", hdr):
+            tab[pm.group(1)] = pm.group(2)
+        for ln in lines:
+            m = _DEF_RE.match(ln)
+            if m:
+                # the defining type is the text right after '='
+                tab[m.group(1)] = m.group(2)
+        symtab[cname] = tab
+
+    # --- call graph (caller -> callee) and while trip counts ------------
+    callers: dict[str, list[str]] = defaultdict(list)
+    trip: dict[str, int] = {}
+    for cname, lines in comps.items():
+        for ln in lines:
+            for m in re.finditer(r"(?:calls|to_apply|body|condition)="
+                                 r"%?([\w\.\-]+)", ln):
+                callee = m.group(1)
+                if callee in comps:
+                    callers[callee].append(cname)
+            if " while(" in ln:
+                mb = re.search(r"body=%?([\w\.\-]+)", ln)
+                mc = re.search(r"condition=%?([\w\.\-]+)", ln)
+                count = None
+                if mc and mc.group(1) in comps:
+                    consts = [int(x) for cl in comps[mc.group(1)]
+                              for x in re.findall(r"constant\((\d+)\)", cl)]
+                    if consts:
+                        count = max(consts)
+                if count is None:
+                    warnings.append(f"unknown trip for {mb and mb.group(1)}")
+                    count = 1
+                if mb:
+                    trip[mb.group(1)] = count
+                    if mc:
+                        trip[mc.group(1)] = count
+
+    import functools
+
+    @functools.lru_cache(maxsize=None)
+    def multiplier(cname: str) -> int:
+        own = trip.get(cname, 1)
+        cs = callers.get(cname, [])
+        if not cs:
+            return own
+        return own * max(multiplier(c) for c in set(cs) if c != cname)
+
+    # --- fused computations: internals are HBM-free ----------------------
+    fused = set()
+    for cname, lines in comps.items():
+        for ln in lines:
+            if re.search(r"\bfusion\(", ln):
+                m = re.search(r"calls=%?([\w\.\-]+)", ln)
+                if m:
+                    fused.add(m.group(1))
+            if "custom_call_target" in ln and "calls=" in ln:
+                m = re.search(r"calls=%?([\w\.\-]+)", ln)
+                if m:
+                    fused.add(m.group(1))
+
+    flops = 0.0
+    hbm = 0.0
+    coll_by_kind: dict[str, float] = {}
+    n_coll = 0
+
+    for cname, lines in comps.items():
+        mult = multiplier(cname)
+        tab = symtab[cname]
+        in_fused = cname in fused
+        for ln in lines:
+            # ---- FLOPs from dots (count fused or not) -------------------
+            dm = re.search(r"=\s*(\S+)\s+dot\(([^)]*)\)", ln)
+            if dm:
+                res = _first_shape(dm.group(1))
+                opnds = _OPND_RE.findall(dm.group(2))
+                lc = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", ln)
+                k = 1
+                if res and opnds and lc and opnds[0] in tab:
+                    lhs = _first_shape(tab[opnds[0]])
+                    if lhs:
+                        for d in (lc.group(1).split(",")
+                                  if lc.group(1) else []):
+                            di = int(d)
+                            if di < len(lhs[1]):
+                                k *= lhs[1][di]
+                    n_res = 1
+                    for d in res[1]:
+                        n_res *= d
+                    flops += 2.0 * n_res * k * mult
+                continue
+            # ---- collectives -------------------------------------------
+            hit = None
+            for kind in _COLLECTIVES:
+                if re.search(rf"\b{kind}(-start)?\(", ln):
+                    hit = kind
+                    break
+            if hit:
+                m = re.search(r"\(([^)]*)\)", ln.partition("=")[2])
+                b = 0
+                if m:
+                    for op in _OPND_RE.findall(m.group(1)):
+                        if op in tab:
+                            b += _shapes_bytes(_result_type(tab[op]))
+                if b == 0:
+                    b = _shapes_bytes(_result_type(
+                        ln.partition("=")[2].strip()))
+                coll_by_kind[hit] = coll_by_kind.get(hit, 0.0) + b * mult
+                n_coll += 1
+                hbm += 2.0 * b * mult   # collectives also touch HBM
+                continue
+            # ---- HBM traffic (top-level, non-fused ops only) ------------
+            if in_fused:
+                continue
+            md = _DEF_RE.match(ln)
+            if not md:
+                continue
+            body = md.group(2)
+            # first parenthesized call in the body identifies the op
+            toks = body.split("(")[0].split()
+            head = (toks[-1] + "(") if toks else ""
+            if not head or any(head == f for f in FREE_OPS):
+                continue
+            res_b = _shapes_bytes(_result_type(body))
+            margs = re.search(r"\(([^)]*)\)", body)
+            opnds = _OPND_RE.findall(margs.group(1)) if margs else []
+            if head in ("dynamic-slice(", "slice(", "gather(",
+                        "broadcast(", "iota(", "reduce(", "reverse(",
+                        "pad("):
+                # reads only the sliced/produced region, not the operand
+                b = 2 * res_b
+            elif head == "dynamic-update-slice(":
+                upd = _shapes_bytes(_result_type(tab[opnds[1]])) \
+                    if len(opnds) > 1 and opnds[1] in tab else res_b
+                b = 2 * upd           # read-modify-write of the region
+            elif head == "scatter(":
+                upd = _shapes_bytes(_result_type(tab[opnds[2]])) \
+                    if len(opnds) > 2 and opnds[2] in tab else res_b
+                b = 2 * upd
+            elif head == "while(":
+                b = 0                 # carried buffers alias in place
+            else:
+                # In-place accumulation fusions (scan-output writes,
+                # grad accumulators): an operand with the same type as the
+                # result aliases it; traffic is only the updated region,
+                # approximated by the remaining operands' bytes.
+                op_types = [_result_type(tab[o]) for o in opnds
+                            if o in tab]
+                res_t = _result_type(body)
+                if res_t in op_types and head == "fusion(":
+                    others = sum(_shapes_bytes(t) for t in op_types
+                                 if t != res_t)
+                    b = 2 * others
+                else:
+                    b = res_b + sum(_shapes_bytes(t) for t in op_types)
+            hbm += b * mult
+
+    return HloAnalysis(flops=flops, hbm_bytes=hbm,
+                       collective_bytes=sum(coll_by_kind.values()),
+                       collective_by_kind=coll_by_kind,
+                       n_collectives=n_coll,
+                       trip_counts=trip, warnings=warnings[:20])
+
+
+def _result_type(def_text: str) -> str:
+    """The leading 'dtype[shape]' (or tuple of them) of a definition."""
+    m = re.match(r"\s*(\([^)]*\)|\S+)", def_text)
+    return m.group(1) if m else ""
+
+
+def top_flop_ops(text: str, k: int = 15) -> list[tuple[float, str, str]]:
+    """Debug helper: the k largest FLOP contributors (flops, comp, line)."""
+    # reuse analyze_hlo's internals via a light re-parse
+    import heapq
+    contributions = []
+    a = analyze_hlo(text)   # builds trip counts; we re-walk for detail
+    # quick re-walk
+    comps, cur = {}, None
+    for raw in text.splitlines():
+        s = raw.strip()
+        if s.endswith("{") and (s.startswith("%") or s.startswith("ENTRY")):
+            cur = s.split()[0 if not s.startswith("ENTRY") else 1].lstrip("%")
+            comps[cur] = []
+        elif s == "}":
+            cur = None
+        elif cur:
+            comps[cur].append(s)
+    # naive: approximate multiplier by trip counts product on name match
+    def mult(c):
+        m = a.trip_counts.get(c, 1)
+        return m
+    for cname, lines in comps.items():
+        tab = {}
+        for ln in lines:
+            mm = _DEF_RE.match(ln)
+            if mm:
+                tab[mm.group(1)] = mm.group(2)
+        for ln in lines:
+            dm = re.search(r"=\s*(\S+)\s+dot\(([^)]*)\)", ln)
+            if not dm:
+                continue
+            res = _first_shape(dm.group(1))
+            opnds = _OPND_RE.findall(dm.group(2))
+            lc = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", ln)
+            kk = 1
+            if res and opnds and lc and opnds[0] in tab:
+                lhs = _first_shape(tab[opnds[0]])
+                if lhs:
+                    for d in (lc.group(1).split(",") if lc.group(1) else []):
+                        if int(d) < len(lhs[1]):
+                            kk *= lhs[1][int(d)]
+                n = 1
+                for d in res[1]:
+                    n *= d
+                contributions.append((2.0 * n * kk * mult(cname), cname,
+                                      ln[:140]))
+    return heapq.nlargest(k, contributions)

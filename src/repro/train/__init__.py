@@ -1,0 +1,6 @@
+from repro.train.state import TrainState
+from repro.train.step import (init_train_state, make_dp_failover_step,
+                              make_gspmd_train_step, shardings_for_params)
+
+__all__ = ["TrainState", "init_train_state", "make_gspmd_train_step",
+           "make_dp_failover_step", "shardings_for_params"]

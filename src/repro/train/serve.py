@@ -1,0 +1,66 @@
+"""Serving: prefill + greedy decode loops and dry-run serve_step builders.
+
+`serve_step` is the unit the decode_* / long_* dry-run cells lower: one new
+token given a KV cache (or recurrent state) of the cell's seq_len.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.api import Model
+
+
+def make_serve_step(model: Model):
+    """Returns step(params, cache, token, pos) -> (next_token, cache)."""
+    def step(params, cache, token, pos):
+        logits, cache = model.decode_step(params, cache, token, pos)
+        nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)[:, None]
+        return nxt, cache
+    return step
+
+
+FULL_SEQ_CACHE_KEYS = ("k_glob", "v_glob")
+
+
+def pad_cache_to(cache: dict, target_len: int, keys=None) -> dict:
+    """Grow *full-sequence* caches (length S) to a decode budget.
+
+    Only the named keys are padded: window caches (hymba, gemma3 local),
+    recurrent states (rwkv/mamba) and cross-attention caches must NOT
+    grow. Whisper's self cache lives under "k"/"v" - pass those.
+    """
+    keys = FULL_SEQ_CACHE_KEYS if keys is None else keys
+    out = dict(cache)
+    for key in keys:
+        if key in out:
+            x = out[key]
+            if x.ndim == 5 and x.shape[2] < target_len:
+                pad = [(0, 0)] * x.ndim
+                pad[2] = (0, target_len - x.shape[2])
+                out[key] = jnp.pad(x, pad)
+    return out
+
+
+def generate(model: Model, params, prompt: jax.Array, max_new: int,
+             batch_extras: Optional[dict] = None) -> np.ndarray:
+    """Greedy generation: prefill the prompt then decode max_new tokens."""
+    B, S = prompt.shape
+    pb = {"tokens": prompt}
+    if batch_extras:
+        pb.update(batch_extras)
+    logits, cache = jax.jit(model.prefill)(params, pb)
+    pad_keys = ("k", "v") if model.cfg.family == "whisper" else None
+    cache = pad_cache_to(cache, S + max_new, keys=pad_keys)
+    step = jax.jit(make_serve_step(model))
+    tok = jnp.argmax(logits, -1).astype(jnp.int32)[:, None]
+    out = [tok]
+    pos = S
+    for i in range(max_new - 1):
+        tok, cache = step(params, cache, tok, jnp.int32(pos))
+        out.append(tok)
+        pos += 1
+    return np.concatenate([np.asarray(t) for t in out], axis=1)

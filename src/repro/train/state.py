@@ -1,0 +1,25 @@
+"""TrainState pytree."""
+from __future__ import annotations
+
+import jax
+
+
+@jax.tree_util.register_pytree_node_class
+class TrainState:
+    def __init__(self, params, opt_state, step):
+        self.params = params
+        self.opt_state = opt_state
+        self.step = step
+
+    def tree_flatten(self):
+        return (self.params, self.opt_state, self.step), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children)
+
+    def replace(self, **kw):
+        d = {"params": self.params, "opt_state": self.opt_state,
+             "step": self.step}
+        d.update(kw)
+        return TrainState(**d)

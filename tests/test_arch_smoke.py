@@ -1,0 +1,101 @@
+"""Per-architecture smoke tests: reduced config of the same family, one
+forward/train step on CPU, asserting output shapes and no NaNs.
+(Full configs are exercised only by the dry-run - no allocation here.)
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_IDS, get_config
+from repro.models import build_model
+from repro.optim import AdamWConfig
+from repro.optim.schedules import constant
+from repro.train import init_train_state, make_gspmd_train_step
+from jax.sharding import Mesh
+
+RNG = np.random.default_rng(0)
+
+
+def make_batch(cfg, B=2, S=24):
+    toks = jnp.asarray(RNG.integers(0, cfg.vocab_size, (B, S)))
+    batch = {"tokens": toks, "labels": toks}
+    if cfg.family == "whisper":
+        batch["frames"] = jnp.asarray(RNG.standard_normal(
+            (B, cfg.n_audio_frames, cfg.d_model)), jnp.float32)
+    if cfg.family == "vlm":
+        batch["prefix_embeds"] = jnp.asarray(RNG.standard_normal(
+            (B, cfg.n_patch_tokens, cfg.d_model)), jnp.float32)
+    return batch
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_full_config_matches_spec(arch):
+    cfg = get_config(arch)
+    spec = {
+        "qwen3-1.7b": (28, 2048, 16, 8, 6144, 151936),
+        "gemma3-27b": (62, 5376, 32, 16, 21504, 262144),
+        "minicpm-2b": (40, 2304, 36, 36, 5760, 122753),
+        "internlm2-1.8b": (24, 2048, 16, 8, 8192, 92544),
+        "rwkv6-7b": (32, 4096, 64, 64, 14336, 65536),
+        "arctic-480b": (35, 7168, 56, 8, 4864, 32000),
+        "phi3.5-moe-42b-a6.6b": (32, 4096, 32, 8, 6400, 32064),
+        "hymba-1.5b": (32, 1600, 25, 5, 5504, 32001),
+        "whisper-base": (6, 512, 8, 8, 2048, 51865),
+        "qwen2-vl-2b": (28, 1536, 12, 2, 8960, 151936),
+    }[arch]
+    got = (cfg.n_layers, cfg.d_model, cfg.n_heads, cfg.n_kv_heads,
+           cfg.d_ff, cfg.vocab_size)
+    assert got == spec
+    # family-specific markers from the assignment
+    if arch == "arctic-480b":
+        assert cfg.n_experts == 128 and cfg.top_k == 2 and cfg.moe_dense_ff
+    if arch == "phi3.5-moe-42b-a6.6b":
+        assert cfg.n_experts == 16 and cfg.top_k == 2
+    if arch == "qwen3-1.7b":
+        assert cfg.qk_norm
+    if arch == "gemma3-27b":
+        assert cfg.global_every == 6  # 5 local : 1 global
+    if arch == "hymba-1.5b":
+        assert cfg.ssm_state == 16
+    if arch == "qwen2-vl-2b":
+        assert cfg.mrope
+    if arch == "whisper-base":
+        assert cfg.encoder_layers == 6
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_smoke_forward_and_train_step(arch):
+    cfg = get_config(arch, smoke=True)
+    model = build_model(cfg)
+    batch = make_batch(cfg)
+    params = jax.jit(model.init)(jax.random.PRNGKey(0))
+    loss = jax.jit(model.loss)(params, batch)
+    assert np.isfinite(float(loss)), f"{arch}: loss={loss}"
+
+    opt = AdamWConfig()
+    state = init_train_state(model, opt)
+    mesh = Mesh(np.array(jax.devices()), ("data",))
+    step = jax.jit(make_gspmd_train_step(model, mesh, opt, constant(1e-3)))
+    state, metrics = step(state, batch)
+    assert np.isfinite(float(metrics["loss"]))
+    assert np.isfinite(float(metrics["grad_norm"]))
+    for leaf in jax.tree.leaves(state.params):
+        assert np.isfinite(np.asarray(leaf, np.float32)).all(), arch
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_smoke_prefill_decode(arch):
+    cfg = get_config(arch, smoke=True)
+    model = build_model(cfg)
+    B, S = 2, 16
+    batch = make_batch(cfg, B, S)
+    batch.pop("labels")
+    params = jax.jit(model.init)(jax.random.PRNGKey(0))
+    logits, _ = jax.jit(model.prefill)(params, batch)
+    assert logits.shape == (B, cfg.vocab_size)
+    cache = model.init_cache(B, S + 4)
+    lg, cache2 = jax.jit(model.decode_step)(
+        params, cache, batch["tokens"][:, :1], jnp.int32(S))
+    assert lg.shape == (B, cfg.vocab_size)
+    assert np.isfinite(np.asarray(lg)).all(), arch

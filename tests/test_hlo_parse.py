@@ -1,0 +1,71 @@
+"""Unit tests for the loop-trip-aware HLO analyzer (roofline inputs)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.roofline.hlo_parse import analyze_hlo
+
+
+def compile_text(fn, *args):
+    return jax.jit(fn).lower(*args).compile().as_text()
+
+
+def test_dot_flops_exact():
+    a = jnp.zeros((64, 128), jnp.float32)
+    b = jnp.zeros((128, 32), jnp.float32)
+    text = compile_text(lambda a, b: a @ b, a, b)
+    got = analyze_hlo(text).flops
+    assert got == pytest.approx(2 * 64 * 128 * 32, rel=0.01)
+
+
+def test_scan_trip_multiplier():
+    w = jnp.zeros((32, 32), jnp.float32)
+    x = jnp.zeros((8, 32), jnp.float32)
+
+    def f(w, x):
+        def body(c, _):
+            return jnp.tanh(c @ w), None
+        c, _ = jax.lax.scan(body, x, None, length=7)
+        return c
+
+    text = compile_text(f, w, x)
+    a = analyze_hlo(text)
+    assert a.flops == pytest.approx(7 * 2 * 8 * 32 * 32, rel=0.05)
+    assert 7 in a.trip_counts.values()
+
+
+def test_nested_scan_multiplies():
+    w = jnp.zeros((16, 16), jnp.float32)
+    x = jnp.zeros((4, 16), jnp.float32)
+
+    def f(w, x):
+        def inner(c, _):
+            return c @ w, None
+
+        def outer(c, _):
+            c, _ = jax.lax.scan(inner, c, None, length=3)
+            return c, None
+        c, _ = jax.lax.scan(outer, x, None, length=5)
+        return c
+
+    text = compile_text(f, w, x)
+    a = analyze_hlo(text)
+    assert a.flops == pytest.approx(15 * 2 * 4 * 16 * 16, rel=0.05)
+
+
+def test_hbm_bytes_reasonable():
+    x = jnp.zeros((1024, 1024), jnp.float32)
+    text = compile_text(lambda x: (x * 2 + 1).sum(), x)
+    a = analyze_hlo(text)
+    nbytes = 1024 * 1024 * 4
+    # at least one read of x; at most a handful of round trips
+    assert nbytes * 0.5 <= a.hbm_bytes <= nbytes * 6
+
+
+def test_no_collectives_single_device():
+    x = jnp.zeros((128,), jnp.float32)
+    text = compile_text(lambda x: x.sum(), x)
+    a = analyze_hlo(text)
+    assert a.collective_bytes == 0
+    assert a.n_collectives == 0

@@ -1,0 +1,133 @@
+"""Validate the closed-form lower bounds (Theorems 1, 2, 3, 6, 13).
+
+Each theorem's closed form is the solution of a min-max program
+min_{x,y>=1} max{...}; we check the algebra by brute-force numeric
+minimization over the (x, y) grid, and check the structural properties the
+paper states (consistency between theorems, regime transition points,
+asymptotics in Table 1).
+"""
+import numpy as np
+import pytest
+
+from repro.core import lower_bounds as lb
+
+
+def brute_single(p, n, ell, tight):
+    best = np.inf
+    for z in np.linspace(1.0, 5.0, 20001):
+        if tight:
+            val = max(2 + (ell - 2) * z / (p - 1), ell * z)
+        else:
+            val = max(2 - z / (p - 1), ell * z)
+        best = min(best, val)
+    return best * n
+
+
+@pytest.mark.parametrize("p", [3, 5, 16, 128])
+@pytest.mark.parametrize("ell", [1.01, 1.14, 1.5, 1.99, 2.0, 2.5, 4.0])
+def test_theorem1_matches_minmax(p, ell):
+    n = 1000.0
+    assert lb.lb_single_straggler(p, n, ell) == pytest.approx(
+        brute_single(p, n, ell, tight=False), rel=1e-3)
+
+
+@pytest.mark.parametrize("p", [3, 5, 16, 128])
+@pytest.mark.parametrize("ell", [1.01, 1.14, 1.5, 1.99, 2.0, 2.5, 4.0])
+def test_theorem6_matches_minmax(p, ell):
+    n = 1000.0
+    assert lb.lb_single_straggler_tight(p, n, ell) == pytest.approx(
+        brute_single(p, n, ell, tight=True), rel=1e-3)
+
+
+def test_theorem6_tighter_than_theorem1():
+    for p in (4, 16, 64):
+        for ell in (1.1, 1.5, 1.9, 2.5):
+            assert lb.lb_single_straggler_tight(p, 1.0, ell) >= \
+                lb.lb_single_straggler(p, 1.0, ell) - 1e-12
+
+
+def test_theorem2_reduces_to_theorem1():
+    for p in (5, 32):
+        for ell in (1.2, 1.8, 3.0):
+            assert lb.lb_multi_straggler(p, 7.0, [ell]) == pytest.approx(
+                lb.lb_single_straggler(p, 7.0, ell))
+
+
+def test_theorem3_reduces_to_theorem1():
+    for p in (5, 32):
+        for ell in (1.2, 1.8, 3.0):
+            assert lb.lb_multi_gpu(p, 7.0, ell, g=1) == pytest.approx(
+                lb.lb_single_straggler(p, 7.0, ell))
+    # and Theorem 13 -> Theorem 6 at g=1
+    for ell in (1.2, 3.0):
+        assert lb.lb_multi_gpu_tight(16, 7.0, ell, g=1) == pytest.approx(
+            lb.lb_single_straggler_tight(16, 7.0, ell))
+
+
+def test_fault_free_t0():
+    assert lb.t0_fault_free(8, 800.0) == pytest.approx(2 * 7 * 100.0)
+    assert lb.t0_fault_free(8, 800.0, g=2) == pytest.approx(7 * 100.0 * 2 / 2)
+
+
+def test_regime_transition():
+    """Table 1: at l >= 2 the straggler-link branch (l n) dominates."""
+    p, n = 16, 1.0
+    for ell in (2.0, 2.4, 5.0):
+        assert lb.lb_single_straggler_tight(p, n, ell) == pytest.approx(
+            ell * n)
+    # Below the transition, the healthy-side branch dominates.
+    assert lb.lb_single_straggler_tight(p, n, 1.1) > 1.1 * n
+
+
+def test_overhead_vanishes_large_p():
+    """Takeaway of Section 3: for l < 2, LB/T0 -> 1 as p grows (O(1/p))."""
+    ell = 1.9
+    overheads = []
+    for p in (8, 64, 512, 4096):
+        ratio = lb.lb_single_straggler_tight(p, 1.0, ell) / \
+            lb.t0_fault_free(p, 1.0)
+        overheads.append(ratio - 1.0)
+    for a, b in zip(overheads, overheads[1:]):
+        assert b < a / 4  # shrinks ~linearly in 1/p (factor-8 p steps)
+    assert overheads[-1] < 0.001
+
+
+def test_paper_claim_less_than_1pct_at_128():
+    """Abstract: 'less than 1% at p=128 GPUs' when l <= 2."""
+    for ell in (1.14, 1.5, 2.0):
+        over = lb.lb_single_straggler_tight(128, 1.0, ell) / \
+            lb.t0_fault_free(128, 1.0) - 1.0
+        assert over < 0.01
+
+
+def test_multi_straggler_bound_monotone():
+    n = 1.0
+    base = lb.lb_multi_straggler(64, n, [1.5])
+    more = lb.lb_multi_straggler(64, n, [1.5, 1.5, 1.5])
+    assert more >= base
+
+
+def test_achieved_times_dominate_bounds():
+    """Closed-form achieved times (Sec 4.3/App C/D/E) >= lower bounds."""
+    for p in (8, 16, 64):
+        for ell in (1.14, 1.5, 2.0, 3.0):
+            for k in (8, 64):
+                t = lb.optcc_time_single(p, 1.0, ell, k)
+                assert t >= lb.lb_single_straggler_tight(p, 1.0, ell) - 1e-9
+    for p in (16, 64):
+        t = lb.optcc_time_multi(p, 1.0, [2.5, 1.5], 64)
+        assert t >= lb.lb_multi_straggler(p, 1.0, [2.5, 1.5]) - 1e-9
+    for g in (2, 4, 8):
+        p = 8 * g
+        for ell in (1.5, 2.0, 3.0):
+            t = lb.optcc_time_multi_gpu(p, 1.0, ell, g, 64)
+            assert t >= lb.lb_multi_gpu_tight(p, 1.0, ell, g) - 1e-9
+
+
+def test_optcc_single_asymptotically_optimal():
+    """Appendix C: T/LB -> 1 (exactly, for all p) as k -> inf."""
+    for p in (8, 32):
+        for ell in (1.14, 1.5, 1.99, 2.0, 3.0):
+            t_inf = lb.optcc_time_asymptotic(p, 1.0, [ell])
+            bound = lb.lb_single_straggler_tight(p, 1.0, ell)
+            assert t_inf == pytest.approx(bound, rel=1e-9)

@@ -1,0 +1,86 @@
+"""Property-based tests (hypothesis) for the system's core invariants.
+
+Invariants:
+  1. Any generated schedule computes a correct AllReduce for random inputs,
+     sizes, straggler positions and slowdowns.
+  2. Simulated time always dominates the information-theoretic lower bound.
+  3. The planner's predicted time also dominates the bound.
+  4. Integer splitting partitions ranges exactly.
+"""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (BandwidthProfile, optcc_schedule, simulate,
+                        verify_allreduce)
+from repro.core import lower_bounds as lb
+from repro.core.ring import split_points
+
+SMALL = dict(max_examples=25, deadline=None)
+
+
+@settings(**SMALL)
+@given(p=st.integers(4, 12),
+       ell=st.floats(1.01, 4.0),
+       k=st.integers(1, 6),
+       straggler=st.integers(0, 100),
+       seed=st.integers(0, 2**31))
+def test_single_straggler_always_correct(p, ell, k, straggler, seed):
+    n = k * (p - 1) * 8
+    prof = BandwidthProfile.single_straggler(p, ell, straggler=straggler % p)
+    sched = optcc_schedule(prof, n, k)
+    x = np.random.default_rng(seed).standard_normal((p, n))
+    verify_allreduce(sched, x)
+
+
+@settings(**SMALL)
+@given(p=st.integers(6, 14),
+       m=st.integers(2, 4),
+       seed=st.integers(0, 2**31),
+       data=st.data())
+def test_multi_straggler_always_correct(p, m, seed, data):
+    ells = data.draw(st.lists(st.floats(1.05, 3.5), min_size=m, max_size=m))
+    k = 3
+    n = k * (p - m) * 8
+    prof = BandwidthProfile.multi_straggler(p, ells)
+    sched = optcc_schedule(prof, n, k)
+    x = np.random.default_rng(seed).standard_normal((p, n))
+    verify_allreduce(sched, x)
+
+
+@settings(**SMALL)
+@given(g=st.integers(2, 4), q=st.integers(3, 6),
+       ell=st.floats(1.05, 3.0), seed=st.integers(0, 2**31))
+def test_multi_gpu_always_correct(g, q, ell, seed):
+    k = 2
+    p = g * q
+    n = g * k * (q - 1) * 4
+    prof = BandwidthProfile.single_straggler(p, ell, straggler=q - 1, g=g)
+    sched = optcc_schedule(prof, n, k)
+    x = np.random.default_rng(seed).standard_normal((p, n))
+    verify_allreduce(sched, x)
+
+
+@settings(**SMALL)
+@given(p=st.integers(4, 10), ell=st.floats(1.01, 4.0), k=st.integers(2, 8))
+def test_sim_time_dominates_lower_bound(p, ell, k):
+    n = k * (p - 1) * 20
+    prof = BandwidthProfile.single_straggler(p, ell)
+    t = simulate(optcc_schedule(prof, n, k)).makespan
+    assert t >= lb.lower_bound(p, n, [ell]) * (1 - 1e-9)
+
+
+@settings(**SMALL)
+@given(p=st.integers(4, 64), ell=st.floats(1.0, 8.0), k=st.integers(1, 64))
+def test_closed_forms_dominate_bounds(p, ell, k):
+    ells = [ell] if ell > 1.0 else []
+    assert lb.optcc_time(p, 1.0, ells, k) >= \
+        lb.lower_bound(p, 1.0, ells) * (1 - 1e-9)
+
+
+@settings(max_examples=50, deadline=None)
+@given(n=st.integers(0, 10_000), parts=st.integers(1, 64))
+def test_split_points_partitions(n, parts):
+    b = split_points(n, parts)
+    assert b[0] == 0 and b[-1] == n
+    assert (np.diff(b) >= 0).all()
+    assert np.diff(b).sum() == n

@@ -1,0 +1,132 @@
+"""Data-level correctness: every schedule computes a full AllReduce.
+
+The executor moves real numpy payloads through the exact flow graph the
+simulator times; a schedule passes iff every rank ends with sum_i x_i.
+Covers ring (healthy + degraded), OptCC single straggler (both the exact
+slotted generator and the legacy pattern-alternating one, with and without
+bubble filling), multi-straggler, and multi-GPU/server schedules.
+"""
+import numpy as np
+import pytest
+
+from repro.core import (BandwidthProfile, optcc_schedule,
+                        ring_allreduce_schedule, verify_allreduce)
+from repro.core.schedule import (optcc_multi_gpu_schedule,
+                                 optcc_multi_schedule, optcc_single_schedule)
+
+RNG = np.random.default_rng(42)
+
+
+def rand_x(p, n):
+    return RNG.standard_normal((p, n))
+
+
+@pytest.mark.parametrize("p", [2, 3, 5, 8, 17])
+def test_ring_healthy(p):
+    n = 16 * p
+    sched = ring_allreduce_schedule(BandwidthProfile.healthy(p), n)
+    verify_allreduce(sched, rand_x(p, n))
+
+
+@pytest.mark.parametrize("p,ell", [(4, 1.5), (8, 2.0), (9, 3.0)])
+def test_ring_degraded_iccl(p, ell):
+    n = 8 * p
+    prof = BandwidthProfile.single_straggler(p, ell, straggler=p // 2)
+    verify_allreduce(ring_allreduce_schedule(prof, n), rand_x(p, n))
+
+
+@pytest.mark.parametrize("p", [5, 8, 16])
+@pytest.mark.parametrize("ell", [1.14, 1.5, 2.0, 3.0])
+@pytest.mark.parametrize("k", [1, 4, 7])
+def test_optcc_single_slotted(p, ell, k):
+    n = max(k * (p - 1) * 8, 64)
+    prof = BandwidthProfile.single_straggler(p, ell)
+    verify_allreduce(optcc_single_schedule(prof, n, k), rand_x(p, n))
+
+
+@pytest.mark.parametrize("straggler", [0, 3, 7])
+def test_optcc_single_straggler_position(straggler):
+    p, k, ell = 8, 4, 1.5
+    n = k * (p - 1) * 10
+    prof = BandwidthProfile.single_straggler(p, ell, straggler=straggler)
+    verify_allreduce(optcc_single_schedule(prof, n, k), rand_x(p, n))
+
+
+@pytest.mark.parametrize("fill", [True, False])
+def test_optcc_single_fill_toggle(fill):
+    p, k, ell = 9, 6, 1.33
+    n = k * (p - 1) * 12
+    prof = BandwidthProfile.single_straggler(p, ell)
+    verify_allreduce(
+        optcc_single_schedule(prof, n, k, fill_bubbles=fill), rand_x(p, n))
+
+
+@pytest.mark.parametrize("p", [5, 8])
+@pytest.mark.parametrize("ell", [1.5, 2.5])
+def test_optcc_single_legacy_patterns(p, ell):
+    """The pattern-alternating (ordering A/B) legacy generator."""
+    k, n = 8, 8 * 8 * (p - 1)
+    prof = BandwidthProfile.single_straggler(p, ell)
+    sched = optcc_single_schedule(prof, n, k, alternate_orderings=True)
+    verify_allreduce(sched, rand_x(p, n))
+
+
+def test_optcc_small_p_fallback():
+    """p=3,4 route to the legacy generator and stay correct."""
+    for p in (3, 4):
+        prof = BandwidthProfile.single_straggler(p, 1.7)
+        verify_allreduce(optcc_single_schedule(prof, 60, 3), rand_x(p, 60))
+
+
+@pytest.mark.parametrize("ells", [[1.5, 1.2], [2.0, 2.0], [3.0, 1.14, 1.7]])
+@pytest.mark.parametrize("p", [8, 16])
+def test_optcc_multi_straggler(p, ells):
+    k = 4
+    n = k * (p - len(ells)) * 10
+    prof = BandwidthProfile.multi_straggler(p, ells)
+    verify_allreduce(optcc_multi_schedule(prof, n, k), rand_x(p, n))
+
+
+def test_optcc_multi_straggler_positions():
+    p, k = 12, 3
+    n = k * 9 * 8
+    prof = BandwidthProfile.multi_straggler(p, [1.5, 2.5, 1.2],
+                                            stragglers=[1, 5, 11])
+    verify_allreduce(optcc_multi_schedule(prof, n, k), rand_x(p, n))
+
+
+@pytest.mark.parametrize("g", [2, 4])
+@pytest.mark.parametrize("q", [4, 6])
+@pytest.mark.parametrize("ell", [1.5, 2.0, 3.0])
+def test_optcc_multi_gpu(g, q, ell):
+    p, k = g * q, 4
+    n = g * k * (q - 1) * 6
+    prof = BandwidthProfile.single_straggler(p, ell, straggler=1, g=g)
+    assert prof.num_servers == q
+    verify_allreduce(optcc_multi_gpu_schedule(prof, n, k), rand_x(p, n))
+
+
+def test_dispatcher_selects_variants():
+    n, k = 480, 4
+    s = optcc_schedule(BandwidthProfile.healthy(8), n, k)
+    assert s.meta["algo"] == "ring"
+    s = optcc_schedule(BandwidthProfile.single_straggler(8, 1.5), n, k)
+    assert s.meta["algo"] == "optcc-single"
+    s = optcc_schedule(BandwidthProfile.multi_straggler(8, [1.5, 1.2]), n, k)
+    assert s.meta["algo"] == "optcc-multi"
+    s = optcc_schedule(
+        BandwidthProfile.single_straggler(8, 2.0, g=2), n, k)
+    assert s.meta["algo"] == "optcc-multigpu"
+
+
+def test_executor_rejects_nontopological():
+    from repro.core.model import Flow, Op, Schedule
+    from repro.core.executor import execute
+    prof = BandwidthProfile.healthy(2)
+    flows = [Flow(fid=0, src=0, dst=1, size=4, deps=(1,), lo=0, hi=4,
+                  op=Op.STORE, key=("x",)),
+             Flow(fid=1, src=1, dst=0, size=4, deps=(), lo=0, hi=4,
+                  op=Op.STORE, key=("x",))]
+    sched = Schedule(profile=prof, n=4, nic_flows=flows)
+    with pytest.raises(ValueError):
+        execute(sched, np.ones((2, 4)))

@@ -1,0 +1,161 @@
+"""Timing validation: simulated schedules vs the paper's closed forms.
+
+Calibrated tolerances (measured, see EXPERIMENTS.md):
+  * ring on healthy profile: exactly T0.
+  * OptCC single straggler (exact slotted construction): within a few % of
+    Eq. (1)/(2); the deviation is the 4-body pipeline head (vs the paper's
+    1-body head), shrinking as k grows.
+  * multi-straggler: at or below the Appendix D.3 closed form (our spread
+    variant slightly beats it), above the Theorem-2 bound.
+  * multi-GPU: within ~45% of Appendix E.4 under the paper's minimal
+    (g-1)x NVLink provisioning (zero-slack packing; the paper's N/S
+    alternation would close this), within ~15% under DGX-realistic 12x.
+"""
+import dataclasses
+
+import pytest
+
+from repro.core import (BandwidthProfile, optcc_schedule,
+                        ring_allreduce_schedule, simulate)
+from repro.core import lower_bounds as lb
+
+
+def sim_time(profile, n, k=None, **kw):
+    if k is None:
+        sched = ring_allreduce_schedule(profile, n)
+    else:
+        sched = optcc_schedule(profile, n, k, **kw)
+    return simulate(sched).makespan
+
+
+@pytest.mark.parametrize("p", [4, 8, 16])
+def test_ring_healthy_achieves_t0(p):
+    n = 240 * p
+    t = sim_time(BandwidthProfile.healthy(p), n)
+    assert t == pytest.approx(lb.t0_fault_free(p, n), rel=1e-9)
+
+
+@pytest.mark.parametrize("p,ell", [(8, 1.5), (8, 2.0), (16, 3.0)])
+def test_ring_degraded_pays_ell(p, ell):
+    """ICCL: the unmodified ring pays >= ~l x T0 (asymptotically)."""
+    n = 480 * p
+    t = sim_time(BandwidthProfile.single_straggler(p, ell), n)
+    assert t >= 0.95 * ell * lb.t0_fault_free(p, n)
+    assert t <= 1.35 * ell * lb.t0_fault_free(p, n)
+
+
+@pytest.mark.parametrize("ell", [1.14, 1.5, 2.0, 3.0])
+@pytest.mark.parametrize("p", [8, 16])
+def test_optcc_single_matches_closed_form(p, ell):
+    k = 32
+    n = k * (p - 1) * 100
+    t = sim_time(BandwidthProfile.single_straggler(p, ell), n, k)
+    pred = lb.optcc_time(p, n, [ell], k)
+    assert t >= lb.lower_bound(p, n, [ell]) * 0.999
+    assert t <= 1.16 * pred          # 4-body head + bounded slot delays
+
+
+def test_optcc_single_converges_with_k():
+    """sim/pred -> 1 as k grows (zero steady-state bubbles)."""
+    p, ell = 16, 1.5
+    ratios = []
+    for k in (16, 64, 192):
+        n = k * (p - 1) * 100
+        t = sim_time(BandwidthProfile.single_straggler(p, ell), n, k)
+        ratios.append(t / lb.optcc_time(p, n, [ell], k))
+    assert ratios[2] < ratios[0]
+    assert ratios[2] < 1.035
+
+
+def test_optcc_beats_iccl_and_r2ccl():
+    """Headline claim: OptCC close to fault-free; baselines far."""
+    from repro.core.baselines import r2ccl_time
+    p, ell, k = 32, 1.5, 96
+    n = k * (p - 1) * 100
+    t0 = lb.t0_fault_free(p, n)
+    t = sim_time(BandwidthProfile.single_straggler(p, ell), n, k)
+    assert t / t0 < 1.10                      # paper: 2-6% band
+    assert ell * t0 / t0 == pytest.approx(1.5)   # ICCL pays l
+    assert t < 0.87 * r2ccl_time(p, n, ell)      # beats SOTA clearly
+
+
+def test_optcc_fill_beats_nofill():
+    """Appendix C: bubble filling strictly reduces time for l < 2."""
+    p, ell, k = 16, 1.5, 64
+    n = k * (p - 1) * 100
+    prof = BandwidthProfile.single_straggler(p, ell)
+    t_fill = sim_time(prof, n, k, fill_bubbles=True)
+    t_nofill = sim_time(prof, n, k, fill_bubbles=False)
+    assert t_fill < t_nofill
+
+
+def test_optcc_ell_ge_2_linear_in_ell():
+    """For l >= 2 the straggler link binds: T ~ l n (Eq. 1)."""
+    p, k = 16, 32
+    n = k * (p - 1) * 100
+    t3 = sim_time(BandwidthProfile.single_straggler(p, 3.0), n, k)
+    t6 = sim_time(BandwidthProfile.single_straggler(p, 6.0), n, k)
+    assert t6 / t3 == pytest.approx(2.0, rel=0.06)
+
+
+@pytest.mark.parametrize("ells", [[1.33, 1.14], [2.0, 1.33]])
+def test_optcc_multi_straggler_time(ells):
+    p, k = 16, 32
+    n = k * (p - len(ells)) * 100
+    prof = BandwidthProfile.multi_straggler(p, ells)
+    t = sim_time(prof, n, k)
+    assert t >= lb.lb_multi_straggler(p, n, ells) * 0.999
+    assert t <= 1.05 * lb.optcc_time_multi(p, n, ells, k)
+
+
+def test_optcc_multi_straggler_beats_degraded_ring():
+    p, k = 16, 32
+    ells = [1.5, 1.5]
+    n = k * (p - 2) * 100
+    prof = BandwidthProfile.multi_straggler(p, ells)
+    t = sim_time(prof, n, k)
+    t_ring = simulate(ring_allreduce_schedule(prof, n)).makespan
+    assert t < 0.85 * t_ring
+
+
+@pytest.mark.parametrize("ell", [1.14, 2.0, 3.0])
+def test_optcc_multi_gpu_time(ell):
+    g, q, k = 4, 8, 16
+    p = g * q
+    n = g * k * (q - 1) * 64
+    prof = BandwidthProfile.single_straggler(p, ell, g=g)
+    t = sim_time(prof, n, k)
+    pred = lb.optcc_time_multi_gpu(p, n, ell, g, k)
+    assert t >= lb.lb_multi_gpu_tight(p, n, ell, g) * 0.999
+    assert t <= 1.45 * pred   # zero-slack NVLink under (g-1)x provisioning
+
+
+@pytest.mark.parametrize("ell", [1.14, 2.0, 3.0])
+def test_optcc_multi_gpu_time_dgx_nvlink(ell):
+    """With DGX-realistic NVLink (12x NIC), E.4 is met within ~15%."""
+    g, q, k = 4, 8, 16
+    p = g * q
+    n = g * k * (q - 1) * 64
+    prof = dataclasses.replace(
+        BandwidthProfile.single_straggler(p, ell, g=g), nvlink_mult=12.0)
+    t = sim_time(prof, n, k)
+    assert t <= 1.15 * lb.optcc_time_multi_gpu(p, n, ell, g, k)
+
+
+def test_no_port_overlap_invariant():
+    """The simulator never books two flows on one port simultaneously."""
+    p, ell, k = 8, 1.5, 8
+    n = k * (p - 1) * 40
+    sched = optcc_schedule(BandwidthProfile.single_straggler(p, ell), n, k)
+    res = simulate(sched)
+    intervals = {}
+    for f in sched.nic_flows:
+        if f.size <= 0:
+            continue
+        s, e = res.start[f.fid], res.finish[f.fid]
+        intervals.setdefault(("s", f.src), []).append((s, e))
+        intervals.setdefault(("r", f.dst), []).append((s, e))
+    for port, iv in intervals.items():
+        iv.sort()
+        for (s1, e1), (s2, e2) in zip(iv, iv[1:]):
+            assert e1 <= s2 + 1e-9, f"overlap on port {port}"

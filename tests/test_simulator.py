@@ -1,0 +1,123 @@
+"""Unit tests for the bandwidth-bound discrete-event simulator."""
+import numpy as np
+import pytest
+
+from repro.core.model import BandwidthProfile, Flow, Op, Schedule
+from repro.core.simulator import simulate
+
+
+def mk(profile, flows, n=100, nv=()):
+    return Schedule(profile=profile, n=n, nic_flows=list(flows),
+                    nvlink_flows=list(nv))
+
+
+def F(fid, src, dst, size, deps=(), pri=None, release=0.0):
+    return Flow(fid=fid, src=src, dst=dst, size=size, deps=tuple(deps),
+                lo=0, hi=size, op=Op.STORE, key=("t", fid), pri=pri,
+                release=release)
+
+
+def test_single_flow_healthy():
+    prof = BandwidthProfile.healthy(2)
+    res = simulate(mk(prof, [F(0, 0, 1, 100)]))
+    assert res.makespan == pytest.approx(100.0)
+
+
+def test_slow_endpoint_throttles():
+    """A flow incident to a straggler takes l * size (either endpoint)."""
+    prof = BandwidthProfile.single_straggler(3, 2.5)
+    res = simulate(mk(prof, [F(0, 0, 1, 100)]))   # from straggler
+    assert res.makespan == pytest.approx(250.0)
+    res = simulate(mk(prof, [F(0, 1, 0, 100)]))   # to straggler
+    assert res.makespan == pytest.approx(250.0)
+    res = simulate(mk(prof, [F(0, 1, 2, 100)]))   # healthy pair
+    assert res.makespan == pytest.approx(100.0)
+
+
+def test_port_exclusivity_serializes():
+    """Two flows into one recv port may not overlap (Section 4.1)."""
+    prof = BandwidthProfile.healthy(3)
+    res = simulate(mk(prof, [F(0, 0, 2, 100), F(1, 1, 2, 100)]))
+    assert res.makespan == pytest.approx(200.0)
+    # distinct ports -> parallel
+    res = simulate(mk(prof, [F(0, 0, 1, 100), F(1, 1, 2, 100)]))
+    assert res.makespan == pytest.approx(100.0)
+
+
+def test_full_duplex():
+    """Send and recv ports are independent (full duplex NICs)."""
+    prof = BandwidthProfile.healthy(2)
+    res = simulate(mk(prof, [F(0, 0, 1, 100), F(1, 1, 0, 100)]))
+    assert res.makespan == pytest.approx(100.0)
+
+
+def test_dependencies_chain():
+    prof = BandwidthProfile.healthy(4)
+    res = simulate(mk(prof, [F(0, 0, 1, 50), F(1, 1, 2, 50, deps=[0]),
+                             F(2, 2, 3, 50, deps=[1])]))
+    assert res.makespan == pytest.approx(150.0)
+
+
+def test_priority_orders_contention():
+    prof = BandwidthProfile.healthy(3)
+    # Lower pri wins the contended port even with higher fid.
+    flows = [F(0, 0, 2, 100, pri=10.0), F(1, 1, 2, 100, pri=1.0)]
+    res = simulate(mk(prof, flows))
+    assert res.start[1] == 0.0 and res.start[0] == pytest.approx(100.0)
+
+
+def test_release_gates_start():
+    prof = BandwidthProfile.healthy(2)
+    res = simulate(mk(prof, [F(0, 0, 1, 10, release=500.0)]))
+    assert res.start[0] == pytest.approx(500.0)
+    assert res.makespan == pytest.approx(510.0)
+
+
+def test_work_conserving_overtaking():
+    """A low-priority ready flow runs when the high-priority one is blocked
+    on its other port - this packs bubble-filling flows into gaps."""
+    prof = BandwidthProfile.healthy(4)
+    flows = [
+        F(0, 1, 2, 100),                  # occupies 1->2
+        F(1, 1, 3, 100, deps=[0]),        # wants port 1 send, later
+        F(2, 0, 3, 50),                   # lower priority by fid, ready now
+    ]
+    res = simulate(mk(prof, flows))
+    assert res.start[2] == 0.0            # overtakes into 3's recv port
+
+
+def test_nvlink_rate_and_separation():
+    """NVLink ports run at (g-1)x NIC rate and don't contend with NIC."""
+    prof = BandwidthProfile.healthy(4, g=4)
+    nic = [F(0, 0, 1, 90)]
+    nv = [Flow(fid=1, src=0, dst=1, size=90, deps=(), lo=0, hi=90,
+               op=Op.STORE, key=("nv",))]
+    res = simulate(mk(prof, nic, nv=nv))
+    assert res.finish[1] == pytest.approx(30.0)   # 90/(g-1)
+    assert res.finish[0] == pytest.approx(90.0)   # unaffected by NVLink
+
+
+def test_deadlock_detection():
+    prof = BandwidthProfile.healthy(2)
+    # Circular dependency -> deadlock must raise, not hang.
+    flows = [F(0, 0, 1, 10, deps=[1]), F(1, 1, 0, 10, deps=[0])]
+    with pytest.raises(RuntimeError, match="deadlock"):
+        simulate(mk(prof, flows))
+
+
+def test_determinism():
+    """Same schedule -> identical result (paper: SimAI is deterministic)."""
+    from repro.core import optcc_schedule
+    prof = BandwidthProfile.single_straggler(8, 1.5)
+    s = optcc_schedule(prof, 7 * 8 * 16, 8)
+    r1, r2 = simulate(s), simulate(s)
+    assert r1.makespan == r2.makespan
+    assert r1.start == r2.start
+
+
+def test_utilization_accounting():
+    prof = BandwidthProfile.healthy(2)
+    res = simulate(mk(prof, [F(0, 0, 1, 60), F(1, 0, 1, 40, deps=[0])]))
+    assert res.utilization("nic", 0, "s") == pytest.approx(1.0)
+    assert res.utilization("nic", 1, "r") == pytest.approx(1.0)
+    assert res.utilization("nic", 1, "s") == 0.0
