@@ -3,12 +3,12 @@
 Element-time is linear in n, so the interesting check is that the pipeline
 amortization (k) keeps the *rate* at the asymptote for huge buffers.
 Derived = completion / T0 at n = 2^31 elements (8 GiB of fp32 gradients).
+Scenarios run through the sweep engine.
 """
 from __future__ import annotations
 
 from repro.core import BandwidthProfile
-from repro.core import lower_bounds as lb
-from benchmarks.common import row, sim_optcc
+from benchmarks.common import row, score, wall
 
 
 def run():
@@ -17,12 +17,10 @@ def run():
     for p, ells, tag in ((64, [1.5], "appF_single"),
                          (64, [1.5, 2.0], "appF_multi")):
         k = 128
-        t0 = lb.t0_fault_free(p, n)
         prof = (BandwidthProfile.single_straggler(p, ells[0])
                 if len(ells) == 1 else
                 BandwidthProfile.multi_straggler(p, ells))
-        t, wall = sim_optcc(prof, n, k)
-        rows.append(row(f"{tag}_p{p}_8GiB_optcc", wall, t / t0))
-        rows.append(row(f"{tag}_p{p}_8GiB_lb", 0.0,
-                        lb.lower_bound(p, n, ells) / t0))
+        r = score(prof, n, k)
+        rows.append(row(f"{tag}_p{p}_8GiB_optcc", wall(r), r.overhead_optcc))
+        rows.append(row(f"{tag}_p{p}_8GiB_lb", 0.0, r.overhead_lb))
     return rows

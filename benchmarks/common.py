@@ -1,31 +1,41 @@
 """Shared helpers for the benchmark suite.
 
-Every benchmark returns rows (name, us_per_call, derived, note):
+The figure/table modules are thin front-ends over the sweep engine
+(repro.sweeps): each declares ScenarioSpecs and maps ScenarioResults to CSV
+rows. Every benchmark returns rows (name, us_per_call, derived, note):
   us_per_call - wall time of the measured unit (schedule gen + simulate)
   derived     - the paper's metric: completion time normalized to the
                 fault-free optimum T0 (NCCL_NoFailure), or as noted.
 """
 from __future__ import annotations
 
-import time
-
-from repro.core import (BandwidthProfile, optcc_schedule,
-                        ring_allreduce_schedule, simulate)
-from repro.core import lower_bounds as lb
-from repro.core.baselines import r2ccl_time
+from repro.core.model import BandwidthProfile
+from repro.sweeps.engine import ScenarioResult, run_scenario
+from repro.sweeps.scenarios import ScenarioSpec
 
 
-def sim_optcc(profile, n, k, **kw):
-    t0 = time.perf_counter()
-    sched = optcc_schedule(profile, n, k, **kw)
-    t = simulate(sched).makespan
-    return t, time.perf_counter() - t0
+def spec_for(profile: BandwidthProfile, n: int, k: int, name: str = "bench",
+             family: str = "bench", simulate_ring: bool = False,
+             fill_bubbles: bool = True) -> ScenarioSpec:
+    """Wrap an explicit BandwidthProfile as a one-off sweep scenario."""
+    return ScenarioSpec(name=name, family=family, p=profile.p, n=n, k=k,
+                        slowdown=profile.slowdown,
+                        gpus_per_server=profile.gpus_per_server,
+                        nvlink_mult=profile.nvlink_mult,
+                        fill_bubbles=fill_bubbles,
+                        simulate_ring=simulate_ring)
 
 
-def sim_ring(profile, n):
-    t0 = time.perf_counter()
-    t = simulate(ring_allreduce_schedule(profile, n)).makespan
-    return t, time.perf_counter() - t0
+def score(profile: BandwidthProfile, n: int, k: int,
+          simulate_ring: bool = False) -> ScenarioResult:
+    """Plan + simulate + score one profile through the sweep engine."""
+    return run_scenario(spec_for(profile, n, k, simulate_ring=simulate_ring))
+
+
+def wall(r: ScenarioResult) -> float:
+    """Wall time of the measured unit: schedule gen + OptCC simulation
+    (ring-baseline simulation time is tracked separately)."""
+    return r.gen_seconds + r.sim_seconds
 
 
 def row(name, wall_s, derived, note=""):

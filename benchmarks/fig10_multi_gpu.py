@@ -2,7 +2,8 @@
 degraded server's NIC pool). Derived = completion time / T0(g).
 
 Reported for both NVLink provisionings: the paper's theoretical minimum
-(g-1)x NIC and the DGX-realistic 12x (footnote 4).
+(g-1)x NIC and the DGX-realistic 12x (footnote 4). Scenarios run through
+the sweep engine.
 """
 from __future__ import annotations
 
@@ -10,7 +11,7 @@ import dataclasses
 
 from repro.core import BandwidthProfile
 from repro.core import lower_bounds as lb
-from benchmarks.common import row, sim_optcc, sim_ring
+from benchmarks.common import row, score, wall
 
 
 def run():
@@ -25,21 +26,21 @@ def run():
                 prof = dataclasses.replace(
                     BandwidthProfile.single_straggler(p, ell, g=g),
                     nvlink_mult=nv)
-                t, wall = sim_optcc(prof, n, k)
-                rows.append(row(f"{tag}_q{q}_optcc_{nvtag}", wall, t / t0))
+                r = score(prof, n, k)
+                rows.append(row(f"{tag}_q{q}_optcc_{nvtag}", wall(r),
+                                r.overhead_optcc))
             rows.append(row(f"{tag}_q{q}_lb", 0.0,
                             lb.lb_multi_gpu_tight(p, n, ell, g) / t0))
     # (e): l sweep at q=8.
     q, k = 8, 24
     p = g * q
     n = g * k * (q - 1) * 64
-    t0 = lb.t0_fault_free(p, n, g)
     for ell in (8 / 7, 2.0, 8 / 3, 4.0):
         prof = dataclasses.replace(
             BandwidthProfile.single_straggler(p, ell, g=g),
             nvlink_mult=12.0)
-        t, wall = sim_optcc(prof, n, k)
-        rows.append(row(f"fig10e_l{ell:.2f}_optcc", wall, t / t0))
-        rows.append(row(f"fig10e_l{ell:.2f}_lb", 0.0,
-                        lb.lb_multi_gpu_tight(p, n, ell, g) / t0))
+        r = score(prof, n, k)
+        rows.append(row(f"fig10e_l{ell:.2f}_optcc", wall(r),
+                        r.overhead_optcc))
+        rows.append(row(f"fig10e_l{ell:.2f}_lb", 0.0, r.overhead_lb))
     return rows

@@ -3,14 +3,15 @@
 (a,b) straggler loses 1/8 NICs (l=8/7~1.14); (c,d) loses 4/8 (l=2);
 (e) varying l. Derived metric = completion time / T0 (NCCL_NoFailure=1.0).
 Compared: OptCC (simulated), ICCL (simulated degraded ring), R2CCL
-(paper's closed form), LB (Theorem 6).
+(paper's closed form), LB (Theorem 6). Simulation + scoring run through the
+sweep engine (repro.sweeps); this module only declares the scenarios.
 """
 from __future__ import annotations
 
 from repro.core import BandwidthProfile
 from repro.core import lower_bounds as lb
 from repro.core.baselines import r2ccl_time
-from benchmarks.common import row, sim_optcc, sim_ring
+from benchmarks.common import row, score, wall
 
 
 def run():
@@ -19,16 +20,14 @@ def run():
     for tag, ell in (("fig8a", 8 / 7), ("fig8c", 2.0)):
         for p, k in ((8, 48), (16, 48), (32, 32), (64, 16)):
             n = k * (p - 1) * 64
-            t0 = lb.t0_fault_free(p, n)
             prof = BandwidthProfile.single_straggler(p, ell)
-            t, wall = sim_optcc(prof, n, k)
-            rows.append(row(f"{tag}_p{p}_optcc", wall, t / t0))
-            t_r, wall_r = sim_ring(prof, n)
-            rows.append(row(f"{tag}_p{p}_iccl", wall_r, t_r / t0))
+            r = score(prof, n, k, simulate_ring=True)
+            rows.append(row(f"{tag}_p{p}_optcc", wall(r), r.overhead_optcc))
+            rows.append(row(f"{tag}_p{p}_iccl", r.ring_sim_seconds,
+                            r.overhead_ring))
             rows.append(row(f"{tag}_p{p}_r2ccl", 0.0,
-                            r2ccl_time(p, n, ell) / t0))
-            rows.append(row(f"{tag}_p{p}_lb", 0.0,
-                            lb.lb_single_straggler_tight(p, n, ell) / t0))
+                            r2ccl_time(p, n, ell) / r.t0))
+            rows.append(row(f"{tag}_p{p}_lb", 0.0, r.overhead_lb))
     # (b)/(d): message-size sweep at p=16 (element-time model is linear in
     # n; this verifies the linearity and pipeline amortization in k).
     for tag, ell in (("fig8b", 8 / 7), ("fig8d", 2.0)):
@@ -36,21 +35,20 @@ def run():
         for scale in (1, 4, 16):
             k = 32 * scale if scale <= 4 else 64
             n = k * (p - 1) * 64
-            t0 = lb.t0_fault_free(p, n)
             prof = BandwidthProfile.single_straggler(p, ell)
-            t, wall = sim_optcc(prof, n, k)
-            rows.append(row(f"{tag}_n{scale}x_optcc", wall, t / t0))
+            r = score(prof, n, k)
+            rows.append(row(f"{tag}_n{scale}x_optcc", wall(r),
+                            r.overhead_optcc))
     # (e): sweep l at p=16.
     p, k = 16, 48
     n = k * (p - 1) * 64
-    t0 = lb.t0_fault_free(p, n)
     for ell in (1.0, 8 / 7, 4 / 3, 1.6, 2.0, 8 / 3, 4.0):
         prof = (BandwidthProfile.healthy(p) if ell == 1.0 else
                 BandwidthProfile.single_straggler(p, ell))
-        t, wall = sim_optcc(prof, n, k)
-        rows.append(row(f"fig8e_l{ell:.2f}_optcc", wall, t / t0))
+        r = score(prof, n, k)
+        rows.append(row(f"fig8e_l{ell:.2f}_optcc", wall(r), r.overhead_optcc))
         rows.append(row(f"fig8e_l{ell:.2f}_iccl", 0.0, ell))
         rows.append(row(f"fig8e_l{ell:.2f}_lb", 0.0,
                         lb.lb_single_straggler_tight(p, n, max(ell, 1.0))
-                        / t0))
+                        / r.t0))
     return rows

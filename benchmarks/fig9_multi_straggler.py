@@ -1,13 +1,12 @@
 """Figure 9: two stragglers, one GPU/server.
 
 (a,b) l1=4/3, l2=8/7; (c,d) l1=2, l2=4/3; (e) l1=l2 sweep.
-Derived = completion time / T0.
+Derived = completion time / T0. Scenarios run through the sweep engine.
 """
 from __future__ import annotations
 
 from repro.core import BandwidthProfile
-from repro.core import lower_bounds as lb
-from benchmarks.common import row, sim_optcc, sim_ring
+from benchmarks.common import row, score, wall
 
 
 def run():
@@ -15,22 +14,18 @@ def run():
     for tag, ells in (("fig9a", [4 / 3, 8 / 7]), ("fig9c", [2.0, 4 / 3])):
         for p, k in ((16, 48), (32, 32), (64, 16)):
             n = k * (p - 2) * 64
-            t0 = lb.t0_fault_free(p, n)
             prof = BandwidthProfile.multi_straggler(p, ells)
-            t, wall = sim_optcc(prof, n, k)
-            rows.append(row(f"{tag}_p{p}_optcc", wall, t / t0))
-            t_r, wall_r = sim_ring(prof, n)
-            rows.append(row(f"{tag}_p{p}_iccl", wall_r, t_r / t0))
-            rows.append(row(f"{tag}_p{p}_lb", 0.0,
-                            lb.lb_multi_straggler(p, n, ells) / t0))
+            r = score(prof, n, k, simulate_ring=True)
+            rows.append(row(f"{tag}_p{p}_optcc", wall(r), r.overhead_optcc))
+            rows.append(row(f"{tag}_p{p}_iccl", r.ring_sim_seconds,
+                            r.overhead_ring))
+            rows.append(row(f"{tag}_p{p}_lb", 0.0, r.overhead_lb))
     # (e): equal-l sweep at p=32.
     p, k = 32, 32
     n = k * (p - 2) * 64
-    t0 = lb.t0_fault_free(p, n)
     for ell in (8 / 7, 4 / 3, 2.0, 8 / 3):
         prof = BandwidthProfile.multi_straggler(p, [ell, ell])
-        t, wall = sim_optcc(prof, n, k)
-        rows.append(row(f"fig9e_l{ell:.2f}_optcc", wall, t / t0))
-        rows.append(row(f"fig9e_l{ell:.2f}_lb", 0.0,
-                        lb.lb_multi_straggler(p, n, [ell, ell]) / t0))
+        r = score(prof, n, k)
+        rows.append(row(f"fig9e_l{ell:.2f}_optcc", wall(r), r.overhead_optcc))
+        rows.append(row(f"fig9e_l{ell:.2f}_lb", 0.0, r.overhead_lb))
     return rows

@@ -11,7 +11,8 @@ import time
 
 from benchmarks import (anchors, appf_large_message, fig8_single_straggler,
                         fig9_multi_straggler, fig10_multi_gpu,
-                        kernels_micro, schedule_gen_speed, table1_bounds)
+                        kernels_micro, schedule_gen_speed, sweep_summary,
+                        table1_bounds)
 from benchmarks.common import emit
 
 MODULES = [
@@ -23,6 +24,7 @@ MODULES = [
     ("appF", appf_large_message),
     ("kernels", kernels_micro),
     ("anchors", anchors),
+    ("sweep", sweep_summary),
 ]
 
 

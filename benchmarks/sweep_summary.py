@@ -1,0 +1,27 @@
+"""Sweep-grid summary rows: the statistical view the four figures can't give.
+
+Runs a thinned smoke grid through the sweep engine and emits the artifact's
+summary percentiles as CSV rows (derived = the percentile value). The full
+grid with per-scenario records is `python -m repro.sweeps --smoke|--full`.
+"""
+from __future__ import annotations
+
+import os
+
+from repro.sweeps import build_artifact, run_sweep, smoke_grid
+from benchmarks.common import row
+
+
+def run():
+    specs = smoke_grid(seed=0)[::4]          # every 4th scenario: ~1/4 cost
+    results = run_sweep(specs, workers=min(os.cpu_count() or 1, 8))
+    art = build_artifact(results, profile="smoke/4", seed=0,
+                         deterministic=False)
+    rows = []
+    for group, stats in [("all", art["summary"]["overall"])] + \
+            sorted(art["summary"]["by_family"].items()):
+        for key in ("overhead_optcc_p50", "overhead_optcc_p99",
+                    "optcc_vs_lb_p99"):
+            rows.append(row(f"sweep_{group}_{key}", 0.0, stats[key],
+                            f"count={stats['count']}"))
+    return rows

@@ -1,0 +1,8 @@
+"""Make `repro` (src layout) and `benchmarks` importable for test runs that
+haven't `pip install -e .`'d the package (e.g. bare `python -m pytest`)."""
+import sys
+from pathlib import Path
+
+_SRC = str(Path(__file__).resolve().parent / "src")
+if _SRC not in sys.path:
+    sys.path.insert(0, _SRC)

@@ -2,7 +2,7 @@
 
 Public API:
   BandwidthProfile, Flow, Op, Schedule       - flow model (core.model)
-  simulate, SimResult                        - bandwidth simulator
+  simulate, simulate_many, SimResult         - bandwidth simulator
   execute, verify_allreduce                  - data-level verification
   ring_allreduce_schedule                    - NCCL ring / ICCL baseline
   optcc_schedule                             - OptCC (all three settings)
@@ -19,10 +19,11 @@ from repro.core.ring import ring_allreduce_schedule
 from repro.core.schedule import (optcc_multi_gpu_schedule,
                                  optcc_multi_schedule, optcc_schedule,
                                  optcc_single_schedule)
-from repro.core.simulator import SimResult, simulate
+from repro.core.simulator import SimResult, simulate, simulate_many
 
 __all__ = [
     "BandwidthProfile", "Flow", "Op", "Schedule", "SimResult", "simulate",
+    "simulate_many",
     "execute", "verify_allreduce", "ring_allreduce_schedule",
     "optcc_schedule", "optcc_single_schedule", "optcc_multi_schedule",
     "optcc_multi_gpu_schedule", "make_plan", "Plan", "lower_bounds",

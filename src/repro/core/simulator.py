@@ -19,7 +19,10 @@ paper's "SimAI is deterministic" setup.
 from __future__ import annotations
 
 import heapq
+from concurrent.futures import ProcessPoolExecutor
+from concurrent.futures.process import BrokenProcessPool
 from dataclasses import dataclass
+from typing import Callable, Iterable, Sequence
 
 from repro.core.model import BandwidthProfile, Flow, Schedule
 
@@ -184,3 +187,33 @@ def simulate(schedule: Schedule) -> SimResult:
     makespan = max(finish_t.values(), default=0.0)
     return SimResult(makespan=makespan, start=start_t, finish=finish_t,
                      port_busy=port_busy)
+
+
+def simulate_many(schedules: Sequence[Schedule] | Iterable[Schedule],
+                  workers: int = 0) -> list[SimResult]:
+    """Simulate a batch of schedules, preserving input order.
+
+    workers == 0 runs serially in-process; workers > 0 fans the batch out
+    over a process pool (schedules are pickled to the workers, so this pays
+    off only when per-schedule simulation dominates serialization — large
+    flow graphs). Results are identical either way: the simulator is
+    deterministic and each schedule is independent.
+    """
+    return map_scenarios(simulate, list(schedules), workers=workers)
+
+
+def map_scenarios(fn: Callable, items: Sequence, workers: int = 0) -> list:
+    """Order-preserving map used by the sweep engine: `fn` must be a
+    module-level picklable callable. workers == 0 -> serial; the serial path
+    is also the fallback when a pool cannot be spawned (sandboxes without
+    /dev/shm or fork support)."""
+    items = list(items)
+    if workers <= 0 or len(items) <= 1:
+        return [fn(x) for x in items]
+    try:
+        with ProcessPoolExecutor(max_workers=workers) as pool:
+            return list(pool.map(fn, items, chunksize=max(1, len(items) // (8 * workers))))
+    except (OSError, BrokenProcessPool):
+        # Pool creation failed, or workers were killed mid-map (seccomp,
+        # rlimits). fn is pure/deterministic, so re-running serially is safe.
+        return [fn(x) for x in items]

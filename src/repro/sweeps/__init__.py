@@ -1,0 +1,32 @@
+"""Fault-scenario sweep engine.
+
+Generates large deterministic grids of degradation scenarios (single/multi
+straggler, multi-GPU servers, heterogeneous slowdowns, correlated server
+faults), runs each through the online planner + bandwidth simulator, scores
+against the paper's lower bounds, and emits a versioned JSON perf artifact
+(BENCH_sweep.json) that CI gates on. See `python -m repro.sweeps --help`.
+
+Public API:
+  ScenarioSpec, smoke_grid, full_grid, GRIDS   - scenario grids
+  run_scenario, run_sweep, ScenarioResult      - execution engine
+  build_artifact, validate_artifact,
+  check_thresholds, write_artifact,
+  load_artifact, canonical_bytes               - artifact I/O + gating
+"""
+from repro.sweeps.artifact import (SCHEMA, THRESHOLDS_SCHEMA, build_artifact,
+                                   canonical_bytes, check_thresholds,
+                                   load_artifact, validate_artifact,
+                                   write_artifact)
+from repro.sweeps.engine import (ScenarioResult, grid_for, run_scenario,
+                                 run_sweep, sanity_check)
+from repro.sweeps.scenarios import (GRIDS, PAPER_ELLS, ScenarioSpec,
+                                    full_grid, smoke_grid)
+
+__all__ = [
+    "ScenarioSpec", "ScenarioResult", "GRIDS", "PAPER_ELLS",
+    "smoke_grid", "full_grid", "grid_for",
+    "run_scenario", "run_sweep", "sanity_check",
+    "SCHEMA", "THRESHOLDS_SCHEMA",
+    "build_artifact", "canonical_bytes", "validate_artifact",
+    "check_thresholds", "write_artifact", "load_artifact",
+]

@@ -1,0 +1,223 @@
+"""Versioned JSON perf artifact (BENCH_sweep.json) + schema/threshold checks.
+
+The artifact is the sweep's single output: per-scenario overheads plus
+p50/p99 summaries, written with canonical serialization (sorted keys, fixed
+separators) so that two runs of the same grid with `measure_latency=False`
+are byte-identical - CI diffs artifacts, and regression gating reads the
+summary block against a checked-in thresholds file.
+
+Schema versioning: bump SCHEMA when a field changes meaning or disappears;
+adding fields is backward-compatible (validators only check what they know).
+"""
+from __future__ import annotations
+
+import json
+import math
+from typing import Optional, Sequence
+
+from repro.sweeps.engine import ScenarioResult
+
+SCHEMA = "optcc-sweep/1"
+THRESHOLDS_SCHEMA = "optcc-sweep-thresholds/1"
+
+_SCENARIO_REQUIRED = {
+    "name": str, "family": str, "algo": str,
+    "p": int, "k": int, "n": int, "gpus_per_server": int,
+    "num_flows": int,
+    "stragglers": list, "ells": list,
+    "t0": float, "lower_bound": float, "t_optcc": float,
+    "t_predicted": float,
+    "overhead_optcc": float, "overhead_lb": float, "optcc_vs_lb": float,
+    "gen_ms": float, "sim_ms": float,
+}
+
+_SUMMARY_KEYS = ("count", "overhead_optcc_p50", "overhead_optcc_p99",
+                 "overhead_optcc_max", "optcc_vs_lb_p50", "optcc_vs_lb_p99",
+                 "optcc_vs_lb_max", "gen_ms_p50", "gen_ms_p99")
+
+
+def percentile(values: Sequence[float], q: float) -> float:
+    """Linear-interpolation percentile (numpy 'linear'), pure Python so the
+    artifact bytes don't depend on the numpy version."""
+    if not values:
+        return math.nan
+    xs = sorted(values)
+    if len(xs) == 1:
+        return xs[0]
+    pos = (q / 100.0) * (len(xs) - 1)
+    lo = int(math.floor(pos))
+    hi = min(lo + 1, len(xs) - 1)
+    frac = pos - lo
+    return xs[lo] * (1.0 - frac) + xs[hi] * frac
+
+
+def _round(x: Optional[float], digits: int = 9) -> Optional[float]:
+    # Fixed rounding keeps artifact bytes stable against float noise from
+    # e.g. different summation orders in future parallel scoring.
+    return None if x is None else round(float(x), digits)
+
+
+def scenario_record(r: ScenarioResult) -> dict:
+    s = r.spec
+    return {
+        "name": s.name,
+        "family": s.family,
+        "algo": r.algo,
+        "p": s.p,
+        "k": s.k,
+        "n": s.n,
+        "gpus_per_server": s.gpus_per_server,
+        "nvlink_mult": s.nvlink_mult,
+        "num_flows": r.num_flows,
+        "stragglers": list(s.stragglers),
+        "ells": [_round(s.slowdown[i]) for i in s.stragglers],
+        "t0": _round(r.t0),
+        "lower_bound": _round(r.lower_bound),
+        "t_optcc": _round(r.t_optcc),
+        "t_ring": _round(r.t_ring),
+        "t_predicted": _round(r.t_predicted),
+        "overhead_optcc": _round(r.overhead_optcc),
+        "overhead_ring": _round(r.overhead_ring),
+        "overhead_lb": _round(r.overhead_lb),
+        "optcc_vs_lb": _round(r.optcc_vs_lb),
+        "gen_ms": _round(r.gen_seconds * 1e3, 6),
+        "sim_ms": _round(r.sim_seconds * 1e3, 6),
+    }
+
+
+def _summarize(records: Sequence[dict]) -> dict:
+    ov = [r["overhead_optcc"] for r in records]
+    vs = [r["optcc_vs_lb"] for r in records]
+    gen = [r["gen_ms"] for r in records]
+    return {
+        "count": len(records),
+        "overhead_optcc_p50": _round(percentile(ov, 50)),
+        "overhead_optcc_p99": _round(percentile(ov, 99)),
+        "overhead_optcc_max": _round(max(ov)),
+        "optcc_vs_lb_p50": _round(percentile(vs, 50)),
+        "optcc_vs_lb_p99": _round(percentile(vs, 99)),
+        "optcc_vs_lb_max": _round(max(vs)),
+        "gen_ms_p50": _round(percentile(gen, 50), 6),
+        "gen_ms_p99": _round(percentile(gen, 99), 6),
+    }
+
+
+def build_artifact(results: Sequence[ScenarioResult], profile: str,
+                   seed: int, deterministic: bool) -> dict:
+    records = [scenario_record(r) for r in results]
+    families = sorted({r["family"] for r in records})
+    return {
+        "schema": SCHEMA,
+        "profile": profile,
+        "seed": seed,
+        "deterministic": deterministic,
+        "scenario_count": len(records),
+        "summary": {
+            "overall": _summarize(records),
+            "by_family": {
+                fam: _summarize([r for r in records if r["family"] == fam])
+                for fam in families
+            },
+        },
+        "scenarios": records,
+    }
+
+
+def canonical_bytes(artifact: dict) -> bytes:
+    return json.dumps(artifact, sort_keys=True, separators=(",", ":"),
+                      allow_nan=False).encode() + b"\n"
+
+
+def write_artifact(artifact: dict, path: str) -> None:
+    with open(path, "wb") as f:
+        f.write(canonical_bytes(artifact))
+
+
+def _reject_constant(name: str) -> float:
+    raise ValueError(f"non-finite JSON constant {name!r} in artifact")
+
+
+def load_artifact(path: str) -> dict:
+    # NaN/Infinity would sail through every comparison in validation and
+    # threshold gating (NaN > limit is False), turning the CI gate green on
+    # corrupted data - reject them at parse time.
+    with open(path, "rb") as f:
+        return json.load(f, parse_constant=_reject_constant)
+
+
+# ----------------------------------------------------------------------------
+# validation + regression gating
+# ----------------------------------------------------------------------------
+
+def validate_artifact(artifact: dict) -> list[str]:
+    """Structural schema check; returns a list of problems (empty = valid)."""
+    errs: list[str] = []
+    if artifact.get("schema") != SCHEMA:
+        errs.append(f"schema is {artifact.get('schema')!r}, want {SCHEMA!r}")
+        return errs
+    for key in ("profile", "seed", "scenario_count", "summary", "scenarios"):
+        if key not in artifact:
+            errs.append(f"missing top-level key {key!r}")
+    if errs:
+        return errs
+    scenarios = artifact["scenarios"]
+    if artifact["scenario_count"] != len(scenarios):
+        errs.append(f"scenario_count {artifact['scenario_count']} != "
+                    f"len(scenarios) {len(scenarios)}")
+    names = set()
+    for i, rec in enumerate(scenarios):
+        rec_errs: list[str] = []
+        for key, typ in _SCENARIO_REQUIRED.items():
+            if key not in rec:
+                rec_errs.append(f"scenario[{i}] missing {key!r}")
+            elif typ is float:
+                if not isinstance(rec[key], (int, float)):
+                    rec_errs.append(f"scenario[{i}].{key} not numeric")
+            elif not isinstance(rec[key], typ):
+                rec_errs.append(f"scenario[{i}].{key} not {typ.__name__}")
+        if rec_errs:
+            errs.extend(rec_errs)
+            continue
+        if rec["name"] in names:
+            errs.append(f"duplicate scenario name {rec['name']!r}")
+        names.add(rec["name"])
+        if rec["t_optcc"] < rec["lower_bound"] * (1 - 1e-9):
+            errs.append(f"{rec['name']}: t_optcc beats the lower bound")
+        if rec["overhead_lb"] > rec["overhead_optcc"] * (1 + 1e-9):
+            errs.append(f"{rec['name']}: overhead_lb > overhead_optcc")
+    summary = artifact["summary"]
+    for group, stats in [("overall", summary.get("overall", {}))] + \
+            sorted(summary.get("by_family", {}).items()):
+        for key in _SUMMARY_KEYS:
+            if key not in stats:
+                errs.append(f"summary[{group}] missing {key!r}")
+    return errs
+
+
+def check_thresholds(artifact: dict, thresholds: dict) -> list[str]:
+    """Regression gate: compare the artifact's summary against a checked-in
+    thresholds file. Returns failures (empty = pass)."""
+    fails: list[str] = []
+    if thresholds.get("schema") != THRESHOLDS_SCHEMA:
+        fails.append(f"thresholds schema is {thresholds.get('schema')!r}, "
+                     f"want {THRESHOLDS_SCHEMA!r}")
+        return fails
+    overall = artifact["summary"]["overall"]
+    checks = [
+        ("overhead_optcc_p99", "p99 OptCC overhead vs fault-free T0"),
+        ("overhead_optcc_max", "max OptCC overhead vs fault-free T0"),
+        ("optcc_vs_lb_p99", "p99 OptCC time vs information-theoretic bound"),
+        ("optcc_vs_lb_max", "max OptCC time vs information-theoretic bound"),
+    ]
+    for key, label in checks:
+        limit = thresholds.get(f"{key}_max")
+        if limit is None:
+            continue
+        got = overall[key]
+        if got > limit:
+            fails.append(f"{label}: {got:.6g} > limit {limit:.6g} ({key})")
+    min_scen = thresholds.get("min_scenarios")
+    if min_scen is not None and artifact["scenario_count"] < min_scen:
+        fails.append(f"scenario_count {artifact['scenario_count']} < "
+                     f"required {min_scen}")
+    return fails

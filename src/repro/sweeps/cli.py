@@ -1,0 +1,120 @@
+"""`python -m repro.sweeps`: run fault-scenario sweeps, write/check artifacts.
+
+Usage:
+  python -m repro.sweeps --smoke                      # CI-sized, seconds
+  python -m repro.sweeps --full --workers 8           # nightly-sized
+  python -m repro.sweeps --smoke --deterministic      # byte-stable artifact
+  python -m repro.sweeps check BENCH_sweep.json --thresholds ci/sweep_thresholds.json
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+from repro.sweeps import artifact as art
+from repro.sweeps.engine import grid_for, run_sweep, sanity_check
+
+
+def _add_run_args(ap: argparse.ArgumentParser) -> None:
+    prof = ap.add_mutually_exclusive_group()
+    prof.add_argument("--smoke", dest="profile", action="store_const",
+                      const="smoke", help="CI-sized grid (seconds on CPU)")
+    prof.add_argument("--full", dest="profile", action="store_const",
+                      const="full", help="nightly-sized grid (minutes)")
+    prof.add_argument("--profile", dest="profile",
+                      help="explicit grid name (smoke|full)")
+    ap.set_defaults(profile="smoke")
+    ap.add_argument("--seed", type=int, default=0,
+                    help="seed for the randomized tail of the grid")
+    ap.add_argument("--workers", type=int,
+                    default=min(os.cpu_count() or 1, 8),
+                    help="worker processes (0 = serial)")
+    ap.add_argument("--out", default="BENCH_sweep.json",
+                    help="artifact path")
+    ap.add_argument("--deterministic", action="store_true",
+                    help="zero wall-clock fields so the artifact is a pure "
+                         "function of the grid (byte-identical across runs)")
+    ap.add_argument("--thresholds", default=None,
+                    help="optionally gate the fresh artifact against a "
+                         "thresholds JSON after the run")
+
+
+def build_parser() -> argparse.ArgumentParser:
+    ap = argparse.ArgumentParser(prog="python -m repro.sweeps",
+                                 description=__doc__.splitlines()[0])
+    sub = ap.add_subparsers(dest="cmd")
+    _add_run_args(ap)
+    chk = sub.add_parser("check", help="validate + threshold-gate an "
+                                       "existing artifact")
+    chk.add_argument("artifact", help="path to BENCH_sweep.json")
+    # SUPPRESS: don't let this subparser's default clobber a --thresholds
+    # given before the `check` word (argparse parent/subparser collision).
+    chk.add_argument("--thresholds", default=argparse.SUPPRESS,
+                     help="thresholds JSON to gate against")
+    return ap
+
+
+def _gate(artifact_obj: dict, thresholds_path: str | None) -> int:
+    errs = art.validate_artifact(artifact_obj)
+    for e in errs:
+        print(f"SCHEMA FAIL: {e}", file=sys.stderr)
+    if errs:
+        return 1
+    print(f"schema OK: {artifact_obj['scenario_count']} scenarios "
+          f"({artifact_obj['schema']})")
+    if thresholds_path is None:
+        return 0
+    with open(thresholds_path) as f:
+        thresholds = json.load(f)
+    fails = art.check_thresholds(artifact_obj, thresholds)
+    for msg in fails:
+        print(f"REGRESSION: {msg}", file=sys.stderr)
+    if fails:
+        return 1
+    print(f"thresholds OK ({thresholds_path})")
+    return 0
+
+
+def cmd_run(args: argparse.Namespace) -> int:
+    t_start = time.perf_counter()
+    specs = grid_for(args.profile, seed=args.seed)
+    print(f"sweep profile={args.profile} seed={args.seed}: "
+          f"{len(specs)} scenarios, workers={args.workers}", file=sys.stderr)
+    results = run_sweep(specs, workers=args.workers,
+                        measure_latency=not args.deterministic)
+    bad = sanity_check(results)
+    for msg in bad:
+        print(f"INVARIANT FAIL: {msg}", file=sys.stderr)
+    artifact_obj = art.build_artifact(results, profile=args.profile,
+                                      seed=args.seed,
+                                      deterministic=args.deterministic)
+    art.write_artifact(artifact_obj, args.out)
+    wall = time.perf_counter() - t_start
+    overall = artifact_obj["summary"]["overall"]
+    print(f"wrote {args.out}: {len(results)} scenarios in {wall:.1f}s | "
+          f"overhead p50={overall['overhead_optcc_p50']:.4f} "
+          f"p99={overall['overhead_optcc_p99']:.4f} "
+          f"max={overall['overhead_optcc_max']:.4f} | "
+          f"vs-LB p99={overall['optcc_vs_lb_p99']:.4f} | "
+          f"gen p99={overall['gen_ms_p99']:.3f}ms")
+    if bad:
+        return 1
+    return _gate(artifact_obj, args.thresholds)
+
+
+def cmd_check(args: argparse.Namespace) -> int:
+    return _gate(art.load_artifact(args.artifact), args.thresholds)
+
+
+def main(argv: list[str] | None = None) -> int:
+    args = build_parser().parse_args(argv)
+    try:
+        if args.cmd == "check":
+            return cmd_check(args)
+        return cmd_run(args)
+    except (ValueError, OSError, json.JSONDecodeError) as e:
+        print(f"error: {e}", file=sys.stderr)
+        return 2

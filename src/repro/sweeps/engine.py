@@ -1,0 +1,134 @@
+"""Scenario sweep engine: grid -> (plan, simulate, score) -> artifact rows.
+
+Each scenario runs the full online path a production deployment would:
+`planner.make_plan` builds the OptCC schedule for the degraded profile
+(timed - this is the claimed <1ms re-planning latency), `core.simulate`
+executes it in the bandwidth-bound flow model, and the result is scored
+against the profile's information-theoretic lower bound and the fault-free
+optimum T0. Optionally the unchanged degraded ring (the ICCL baseline) is
+simulated on the same profile for a head-to-head overhead comparison.
+
+Scenario execution is embarrassingly parallel; `run_sweep` fans the grid out
+over worker processes via core.simulator.map_scenarios (workers=0 -> serial,
+same results - the model is deterministic).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Optional, Sequence
+
+from repro.core.planner import make_plan
+from repro.core.ring import ring_allreduce_schedule
+from repro.core.simulator import map_scenarios, simulate
+from repro.sweeps.scenarios import GRIDS, ScenarioSpec
+
+
+@dataclasses.dataclass
+class ScenarioResult:
+    """Scored outcome of one scenario. Times are element-time units."""
+
+    spec: ScenarioSpec
+    algo: str
+    t_optcc: float                 # simulated OptCC completion time
+    t_ring: Optional[float]        # simulated degraded ring (ICCL), if run
+    t_predicted: float             # planner's closed-form prediction
+    lower_bound: float             # tightest applicable theorem
+    t0: float                      # fault-free optimum (Patarasuk-Yuan)
+    num_flows: int
+    gen_seconds: float             # schedule-generation wall time
+    sim_seconds: float             # OptCC simulation wall time (not a claim)
+    ring_sim_seconds: float = 0.0  # ring-baseline simulation wall time
+
+    @property
+    def overhead_optcc(self) -> float:
+        """Simulated time vs the fault-free optimum (the paper's metric)."""
+        return self.t_optcc / self.t0
+
+    @property
+    def overhead_ring(self) -> Optional[float]:
+        return None if self.t_ring is None else self.t_ring / self.t0
+
+    @property
+    def overhead_lb(self) -> float:
+        """Unavoidable overhead: no algorithm can beat this."""
+        return self.lower_bound / self.t0
+
+    @property
+    def optcc_vs_lb(self) -> float:
+        """Schedule quality: simulated time vs the lower bound (>= 1 always,
+        or the simulator/bound is broken)."""
+        return self.t_optcc / self.lower_bound
+
+
+def run_scenario(spec: ScenarioSpec,
+                 measure_latency: bool = True) -> ScenarioResult:
+    """Plan + simulate + score one scenario."""
+    profile = spec.profile()
+    plan = make_plan(profile, spec.n, k=spec.k,
+                     fill_bubbles=spec.fill_bubbles)
+    t_sim0 = time.perf_counter()
+    t_optcc = simulate(plan.schedule).makespan
+    sim_seconds = time.perf_counter() - t_sim0
+    t_ring = None
+    ring_sim_seconds = 0.0
+    if spec.simulate_ring:
+        if plan.schedule.meta.get("algo") == "ring":
+            t_ring = t_optcc          # healthy: the plan already is the ring
+        else:
+            t_ring0 = time.perf_counter()
+            t_ring = simulate(ring_allreduce_schedule(profile, spec.n)).makespan
+            ring_sim_seconds = time.perf_counter() - t_ring0
+    return ScenarioResult(
+        spec=spec,
+        algo=plan.algo,
+        t_optcc=t_optcc,
+        t_ring=t_ring,
+        t_predicted=plan.predicted_time,
+        lower_bound=plan.lower_bound,
+        t0=plan.t0,
+        num_flows=plan.schedule.num_flows,
+        gen_seconds=plan.gen_seconds if measure_latency else 0.0,
+        sim_seconds=sim_seconds if measure_latency else 0.0,
+        ring_sim_seconds=ring_sim_seconds if measure_latency else 0.0,
+    )
+
+
+def _run_scenario_timed(spec: ScenarioSpec) -> ScenarioResult:
+    return run_scenario(spec, measure_latency=True)
+
+
+def _run_scenario_untimed(spec: ScenarioSpec) -> ScenarioResult:
+    return run_scenario(spec, measure_latency=False)
+
+
+def run_sweep(specs: Sequence[ScenarioSpec], workers: int = 0,
+              measure_latency: bool = True) -> list[ScenarioResult]:
+    """Run a scenario grid, preserving grid order.
+
+    measure_latency=False zeroes all wall-clock fields, making the results -
+    and the artifact built from them - a pure function of the grid
+    (byte-identical across runs; the determinism CI check uses this).
+    """
+    fn = _run_scenario_timed if measure_latency else _run_scenario_untimed
+    return map_scenarios(fn, list(specs), workers=workers)
+
+
+def grid_for(profile: str, seed: int = 0) -> list[ScenarioSpec]:
+    try:
+        return GRIDS[profile](seed)
+    except KeyError:
+        raise ValueError(f"unknown sweep profile {profile!r}; "
+                         f"choose from {sorted(GRIDS)}") from None
+
+
+def sanity_check(results: Sequence[ScenarioResult],
+                 tol: float = 1e-9) -> list[str]:
+    """Model-level invariant violations (empty list = all good):
+    simulated time must dominate the information-theoretic lower bound."""
+    bad = []
+    for r in results:
+        if r.t_optcc < r.lower_bound * (1.0 - tol):
+            bad.append(f"{r.spec.name}: simulated {r.t_optcc:.6g} < "
+                       f"lower bound {r.lower_bound:.6g}")
+    return bad

@@ -7,7 +7,9 @@ lowering itself requires a real TPU (documented in DESIGN.md).
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+pytest.importorskip("hypothesis", reason="property tests need the hypothesis extra")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.kernels.chunk_reduce.ops import chunk_reduce
 from repro.kernels.chunk_reduce.ref import chunk_reduce_ref

@@ -8,7 +8,10 @@ Invariants:
   4. Integer splitting partitions ranges exactly.
 """
 import numpy as np
-from hypothesis import given, settings, strategies as st
+import pytest
+
+pytest.importorskip("hypothesis", reason="property tests need the hypothesis extra")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core import (BandwidthProfile, optcc_schedule, simulate,
                         verify_allreduce)

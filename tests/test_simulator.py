@@ -3,7 +3,7 @@ import numpy as np
 import pytest
 
 from repro.core.model import BandwidthProfile, Flow, Op, Schedule
-from repro.core.simulator import simulate
+from repro.core.simulator import simulate, simulate_many
 
 
 def mk(profile, flows, n=100, nv=()):
@@ -113,6 +113,21 @@ def test_determinism():
     r1, r2 = simulate(s), simulate(s)
     assert r1.makespan == r2.makespan
     assert r1.start == r2.start
+
+
+def test_simulate_many_matches_simulate():
+    from repro.core import optcc_schedule, ring_allreduce_schedule
+    scheds = [
+        optcc_schedule(BandwidthProfile.single_straggler(8, 1.5), 7 * 8 * 16, 8),
+        ring_allreduce_schedule(BandwidthProfile.healthy(8), 800),
+        optcc_schedule(BandwidthProfile.multi_straggler(8, [2.0, 1.5]),
+                       6 * 4 * 16, 4),
+    ]
+    serial = simulate_many(scheds, workers=0)
+    assert [r.makespan for r in serial] == \
+        [simulate(s).makespan for s in scheds]
+    pooled = simulate_many(scheds, workers=2)
+    assert [r.makespan for r in pooled] == [r.makespan for r in serial]
 
 
 def test_utilization_accounting():

@@ -1,0 +1,161 @@
+"""Sweep engine: grid determinism, artifact schema, and the paper's
+statistical claim (OptCC no worse than the degraded ring wherever the worst
+NIC keeps >= 50% bandwidth) on a CI-sized sub-grid."""
+import copy
+import json
+
+import pytest
+
+from repro.sweeps import (SCHEMA, build_artifact, canonical_bytes,
+                          check_thresholds, full_grid, run_scenario,
+                          run_sweep, sanity_check, smoke_grid,
+                          validate_artifact)
+from repro.sweeps.artifact import percentile
+from repro.sweeps.scenarios import ScenarioSpec
+
+# A thinned slice of the smoke grid: every 6th scenario keeps all five
+# families represented while staying a few seconds of CPU.
+SUB = smoke_grid(seed=0)[::6]
+
+
+@pytest.fixture(scope="module")
+def sub_results():
+    return run_sweep(SUB, workers=0, measure_latency=False)
+
+
+@pytest.fixture(scope="module")
+def sub_artifact(sub_results):
+    return build_artifact(sub_results, profile="smoke/6", seed=0,
+                          deterministic=True)
+
+
+# ----------------------------------------------------------------------------
+# grids
+# ----------------------------------------------------------------------------
+
+def test_grids_are_deterministic():
+    a, b = smoke_grid(seed=0), smoke_grid(seed=0)
+    assert a == b
+    assert smoke_grid(seed=1) != a          # seed actually feeds the tail
+    assert full_grid(seed=0) == full_grid(seed=0)
+
+
+def test_smoke_grid_size_and_diversity():
+    specs = smoke_grid(seed=0)
+    assert len(specs) >= 200
+    fams = {s.family for s in specs}
+    assert {"healthy", "single", "multi", "multigpu", "correlated"} <= fams
+    # Distinct scenarios: no two specs share the same physical setup.
+    keys = {(s.p, s.n, s.k, s.slowdown, s.gpus_per_server, s.nvlink_mult)
+            for s in specs}
+    assert len(keys) == len(specs)
+    # The nightly grid keeps every family too (dedup must not fold the
+    # correlated-fault block into multigpu).
+    full_fams = {s.family for s in full_grid(seed=0)}
+    assert {"healthy", "single", "multi", "multigpu", "correlated"} <= full_fams
+
+
+def test_heterogeneous_ells_present():
+    hetero = [s for s in smoke_grid(seed=0) if s.family == "multi"
+              and len(set(s.slowdown[i] for i in s.stragglers)) > 1]
+    assert hetero
+
+
+# ----------------------------------------------------------------------------
+# engine + invariants
+# ----------------------------------------------------------------------------
+
+def test_sweep_results_dominate_lower_bound(sub_results):
+    assert sanity_check(sub_results) == []
+    for r in sub_results:
+        assert r.t_optcc >= r.lower_bound * (1 - 1e-9), r.spec.name
+        # Note: lower_bound >= t0 only holds for g == 1; the multi-GPU
+        # bound references q = p/g servers, so it can sit below the p-NIC
+        # fault-free optimum (the seed's fig10 LB rows are < 1.0 too).
+        assert r.t0 > 0 and r.lower_bound > 0
+
+
+def test_optcc_beats_degraded_ring_for_ell_le_2(sub_results):
+    """The paper's headline regime: worst NIC keeps >= 50% bandwidth =>
+    OptCC overhead <= degraded-ring (ICCL) overhead, scenario by scenario."""
+    checked = 0
+    for r in sub_results:
+        if r.t_ring is None or not r.spec.stragglers:
+            continue
+        if r.spec.max_ell <= 2.0:
+            assert r.overhead_optcc <= r.overhead_ring * (1 + 1e-9), \
+                (r.spec.name, r.overhead_optcc, r.overhead_ring)
+            checked += 1
+    assert checked >= 10                    # the regime is actually covered
+
+
+def test_parallel_matches_serial():
+    specs = SUB[:6]
+    serial = run_sweep(specs, workers=0, measure_latency=False)
+    par = run_sweep(specs, workers=2, measure_latency=False)
+    for a, b in zip(serial, par):
+        assert a.t_optcc == b.t_optcc
+        assert a.t_ring == b.t_ring
+        assert a.lower_bound == b.lower_bound
+
+
+def test_single_scenario_healthy_ring_reuse():
+    spec = ScenarioSpec(name="h", family="healthy", p=8, n=8 * 64, k=4,
+                        slowdown=(1.0,) * 8)
+    r = run_scenario(spec, measure_latency=False)
+    assert r.algo == "ring"
+    assert r.t_ring == r.t_optcc            # healthy plan *is* the ring
+
+
+# ----------------------------------------------------------------------------
+# artifact
+# ----------------------------------------------------------------------------
+
+def test_artifact_schema_valid(sub_artifact):
+    assert sub_artifact["schema"] == SCHEMA
+    assert validate_artifact(sub_artifact) == []
+    # round-trip through JSON keeps it valid (what CI consumes)
+    assert validate_artifact(json.loads(canonical_bytes(sub_artifact))) == []
+
+
+def test_artifact_byte_identical_across_runs(sub_artifact):
+    results2 = run_sweep(SUB, workers=0, measure_latency=False)
+    art2 = build_artifact(results2, profile="smoke/6", seed=0,
+                          deterministic=True)
+    assert canonical_bytes(sub_artifact) == canonical_bytes(art2)
+
+
+def test_validate_catches_corruption(sub_artifact):
+    bad = copy.deepcopy(sub_artifact)
+    bad["scenarios"][0]["t_optcc"] = bad["scenarios"][0]["lower_bound"] * 0.5
+    assert any("lower bound" in e for e in validate_artifact(bad))
+    bad = copy.deepcopy(sub_artifact)
+    del bad["scenarios"][0]["overhead_optcc"]
+    assert validate_artifact(bad)
+    bad = copy.deepcopy(sub_artifact)
+    bad["scenario_count"] += 1
+    assert validate_artifact(bad)
+    bad = copy.deepcopy(sub_artifact)
+    bad["schema"] = "optcc-sweep/0"
+    assert validate_artifact(bad)
+
+
+def test_thresholds_gate(sub_artifact):
+    ths = {"schema": "optcc-sweep-thresholds/1",
+           "overhead_optcc_p99_max": 100.0,
+           "optcc_vs_lb_max_max": 100.0,
+           "min_scenarios": 1}
+    assert check_thresholds(sub_artifact, ths) == []
+    tight = dict(ths, overhead_optcc_p99_max=1.0)
+    assert any("p99" in f for f in check_thresholds(sub_artifact, tight))
+    many = dict(ths, min_scenarios=10 ** 6)
+    assert check_thresholds(sub_artifact, many)
+    assert check_thresholds(sub_artifact, {"schema": "nope"})
+
+
+def test_percentile():
+    xs = list(range(1, 101))
+    assert percentile(xs, 50) == pytest.approx(50.5)
+    assert percentile(xs, 99) == pytest.approx(99.01)
+    assert percentile([7.0], 99) == 7.0
+    assert percentile(xs, 0) == 1 and percentile(xs, 100) == 100
