@@ -1,8 +1,11 @@
 """Section 4.3 claim: closed-form schedule generation, <1 ms at p=1024.
 
-Measures (a) the O(pk) slot-descriptor path the claim refers to, and
-(b) full Flow-graph materialization (the simulator's input; O(p^2 k)).
-Derived = wall milliseconds.
+Measures (a) the O(pk) slot-descriptor path the claim refers to (batched
+numpy array program; also CI-gated via schedgen_latency_ms_max in
+ci/sweep_thresholds.json), (b) the columnar arrays path the sweep engine
+simulates (same O(p^2 k) flow graph as Flow objects, built by vectorized
+generators), and (c) full Flow-object materialization (the executor's
+input). Derived = wall milliseconds.
 """
 from __future__ import annotations
 
@@ -23,6 +26,14 @@ def run():
         dt = (time.perf_counter() - t0) / 5
         rows.append(row(f"schedgen_descriptor_p{p}", dt, dt * 1e3,
                         "paper: <1ms at p=1024"))
+    for p in (64, 256, 1024):
+        prof = BandwidthProfile.single_straggler(p, 1.5)
+        n = (p - 1) * 4 * 16
+        t0 = time.perf_counter()
+        make_plan(prof, n, k=4, materialize="arrays")
+        dt = time.perf_counter() - t0
+        rows.append(row(f"schedgen_arrays_p{p}", dt, dt * 1e3,
+                        "columnar flow graph (sweep hot path)"))
     for p in (64, 256):
         prof = BandwidthProfile.single_straggler(p, 1.5)
         n = (p - 1) * 4 * 16

@@ -165,7 +165,15 @@ class Schedule:
     nic_flows: list[Flow]
     nvlink_flows: list[Flow] = dataclasses.field(default_factory=list)
     meta: dict = dataclasses.field(default_factory=dict)
+    # Columnar flow graph (core.flowvec.FlowArrays) built by the vectorized
+    # generators. When set, nic_flows/nvlink_flows may be empty: the sweep
+    # hot path simulates straight from the arrays and never pays for Flow
+    # object construction. Schedules that need per-flow semantics (executor,
+    # correctness tests) are generated with materialize=True instead.
+    arrays: object = None
 
     @property
     def num_flows(self) -> int:
+        if self.arrays is not None:
+            return self.arrays.nflows
         return len(self.nic_flows) + len(self.nvlink_flows)

@@ -14,6 +14,9 @@ from __future__ import annotations
 
 import dataclasses
 import time
+from collections.abc import Mapping
+
+import numpy as np
 
 from repro.core import lower_bounds as lb
 from repro.core.model import BandwidthProfile, Schedule
@@ -37,11 +40,46 @@ class Plan:
         return self.predicted_time / self.t0 if self.t0 else float("inf")
 
 
+class _SlotTable(Mapping):
+    """Read-only (segment, section) -> slot-tuple view over the batched
+    descriptor array. Behaves like the dict it replaced (len, [], in,
+    .keys()/.items()), but construction is O(1) Python objects - tuples are
+    materialized only for the entries actually read, which is what keeps the
+    p=1024 descriptor under the 1 ms re-planning budget."""
+
+    __slots__ = ("_cols",)
+
+    def __init__(self, cols: np.ndarray):
+        self._cols = cols                     # (k, ph, 5) float64
+
+    def __getitem__(self, key):
+        m, j = key
+        k, ph, _ = self._cols.shape
+        if not (0 <= m < k and 0 <= j < ph):
+            raise KeyError(key)
+        nu, t1, t2, t3, t4 = self._cols[m, j].tolist()
+        return (int(nu), t1, t2, t3, t4)
+
+    def __len__(self):
+        return self._cols.shape[0] * self._cols.shape[1]
+
+    def __iter__(self):
+        k, ph, _ = self._cols.shape
+        return ((m, j) for m in range(k) for j in range(ph))
+
+
 def plan_descriptor(profile: BandwidthProfile, n: int, k: int) -> dict:
     """O(p k) closed-form schedule descriptor (Section 4.3's complexity
     claim): per-(segment, section) slot offsets; the per-hop flow graph is
     implied by the closed-form chain rules and only materialized when the
-    runtime (or simulator) needs individual flows."""
+    runtime (or simulator) needs individual flows.
+
+    All five slot columns are in element-time units and scale linearly with
+    n (every term carries a factor of the slot width s_i; an earlier version
+    subtracted raw constants from the S2/S3 slots, which broke unit
+    consistency and went negative for small n). Computed as one batched
+    numpy program over the (k, p-1) grid - this is the <1 ms re-planning
+    path gated by ci/sweep_thresholds.json (schedgen_latency_ms_max)."""
     p = profile.p
     stragglers = profile.stragglers
     ell = max(profile.slowdown)
@@ -49,36 +87,61 @@ def plan_descriptor(profile: BandwidthProfile, n: int, k: int) -> dict:
     s_i = n / max(k * ph, 1)
     w = max(ell, 2.0)
     body = w * ph * s_i
-    slots = {}
-    for m in range(k):
-        for j in range(ph):
-            nu = (j + m) % ph
-            slots[(m, j)] = (
-                nu,                                   # owner index
-                m * body + (2 * nu + ph) * s_i,       # S1 chain start
-                (m + 2) * body + 2 * nu * s_i - 2,    # S2 slot
-                (m + 3) * body + 2 * nu * s_i - 4,    # S3 slot
-                (m + 3) * body + (2 * nu + 2 * ph - 3) * s_i,  # S4 start
-            )
+    m = np.arange(k, dtype=np.float64)[:, None]          # segment
+    j = np.arange(ph, dtype=np.float64)[None, :]         # section
+    nu = (j + m) % ph                                    # owner index
+    cols = np.empty((k, ph, 5))
+    cols[:, :, 0] = nu
+    cols[:, :, 1] = m * body + (2.0 * nu + ph) * s_i         # S1 chain start
+    cols[:, :, 2] = (m + 2) * body + (2.0 * nu - 2.0) * s_i  # S2 slot
+    cols[:, :, 3] = (m + 3) * body + (2.0 * nu - 4.0) * s_i  # S3 slot
+    cols[:, :, 4] = (m + 3) * body + (2.0 * nu + 2.0 * ph - 3.0) * s_i  # S4
     return {"algo": "optcc" if stragglers else "ring", "k": k,
-            "body": body, "slots": slots}
+            "body": body, "slots": _SlotTable(cols)}
 
 
 def make_plan(profile: BandwidthProfile, n: int, k: int = 16,
-              fill_bubbles: bool = True, materialize: bool = True) -> Plan:
+              fill_bubbles: bool = True,
+              materialize: bool | str = True) -> Plan:
+    """materialize=True -> Flow-object schedule (executor-ready);
+    materialize="arrays" -> columnar schedule (simulator hot path; same
+    flow graph, no Flow objects); materialize=False -> descriptor only.
+
+    The planner picks the *predicted-faster* of OptCC and the FIFO ring.
+    The FIFO ring on a degraded profile costs exactly l_max 2(p-1)n/p (the
+    slowest link paces a contention-free ring), so when OptCC's pipeline
+    fill would cost more - small p, shallow k, l close to 1 - staying on
+    the ring is the right call, and the calibrated optcc_time (within 10%
+    of the simulator, tests/test_schedule_time.py) makes this comparison
+    trustworthy at planning time."""
     t_start = time.perf_counter()
-    descriptor = plan_descriptor(profile, n, k)
-    schedule = optcc_schedule(profile, n, k, fill_bubbles) if materialize \
-        else None
-    gen_s = time.perf_counter() - t_start
     g = profile.gpus_per_server
     ells = [l for l in profile.slowdown if l > 1.0]
     # De-duplicate per-server slowdowns in the multi-GPU case.
     if g > 1 and ells:
         ells = [max(ells)]
+    optcc_pred = lb.optcc_time(profile.p, n, ells, k, g)
+    ring_pred = max(profile.slowdown) * lb.t0_fault_free(profile.p, n, 1)
+    use_ring = ring_pred <= optcc_pred      # healthy profiles tie -> ring
+    descriptor = plan_descriptor(profile, n, k)
+    if use_ring:
+        descriptor["algo"] = "ring"
+    if materialize == "arrays":
+        from repro.core.schedule_vec import optcc_schedule_arrays, ring_arrays
+        schedule = ring_arrays(profile, n) if use_ring else \
+            optcc_schedule_arrays(profile, n, k, fill_bubbles)
+    elif materialize:
+        if use_ring:
+            from repro.core.ring import ring_allreduce_schedule
+            schedule = ring_allreduce_schedule(profile, n)
+        else:
+            schedule = optcc_schedule(profile, n, k, fill_bubbles)
+    else:
+        schedule = None
+    gen_s = time.perf_counter() - t_start
     if schedule is not None:
         algo = schedule.meta["algo"]
-    elif not profile.stragglers:
+    elif use_ring:
         algo = "ring"
     elif g > 1:
         algo = "optcc-multigpu"
@@ -89,7 +152,7 @@ def make_plan(profile: BandwidthProfile, n: int, k: int = 16,
         schedule=schedule,
         algo=algo,
         lower_bound=lb.lower_bound(profile.p, n, ells, g),
-        predicted_time=lb.optcc_time(profile.p, n, ells, k, g),
+        predicted_time=ring_pred if use_ring else optcc_pred,
         t0=lb.t0_fault_free(profile.p, n, g),
         gen_seconds=gen_s,
         descriptor=descriptor,

@@ -14,6 +14,17 @@ round t rank r sends chunk (r - t) mod p to rank (r+1) mod p (ACCUM).
 Allgather: p-1 rounds, in round t rank r sends chunk (r + 1 - t) mod p
 (STORE). Dependencies follow each chunk's reduction chain, so rounds
 pipeline naturally in the simulator.
+
+Each rank additionally sends its rounds *in order* (a FIFO dependency on
+its own previous send), modelling a real NCCL ring where a rank's proxy
+thread posts sends in ring order. Without this, near-even chunk rounding
+lets the greedy simulator reorder sends at mild slowdowns, and the resulting
+convoy effect made degraded-ring time non-monotonic in ell (PR-5 follow-up).
+With FIFO sends the ring is a contention-free max-plus system: every flow
+starts exactly at max(finish[deps]), which is (a) provably monotone in every
+slowdown factor and (b) what lets `core.flowvec` replay the ring as a
+vectorized recurrence, bit-identical to the event loop
+(meta["vec_exact"]).
 """
 from __future__ import annotations
 
@@ -37,6 +48,14 @@ def ring_allreduce_schedule(profile: BandwidthProfile, n: int) -> Schedule:
     # last_flow[(r, c)] = fid of the flow that most recently delivered chunk c
     # to rank r (the dependency for r's next send of chunk c).
     last_recv: dict[tuple[int, int], int] = {}
+    # last_send[r] = fid of rank r's previous wire send (FIFO sequencing).
+    last_send: dict[int, int] = {}
+
+    def fifo(r: int, deps: tuple[int, ...]) -> tuple[int, ...]:
+        prev = last_send.get(r)
+        if prev is not None and prev not in deps:
+            deps = deps + (prev,)
+        return deps
 
     # Reduce-scatter.
     for t in range(p - 1):
@@ -48,9 +67,10 @@ def ring_allreduce_schedule(profile: BandwidthProfile, n: int) -> Schedule:
                 deps = (last_recv[(r, c)],)
             lo, hi = int(bounds[c]), int(bounds[c + 1])
             flows.append(Flow(fid=fid, src=r, dst=dst, size=hi - lo,
-                              deps=deps, lo=lo, hi=hi, op=Op.ACCUM,
+                              deps=fifo(r, deps), lo=lo, hi=hi, op=Op.ACCUM,
                               key=("rs", c)))
             last_recv[(dst, c)] = fid
+            last_send[r] = fid
             fid += 1
 
     # After RS, rank r holds the full sum of chunk (r + 1) mod p. Self-store
@@ -72,10 +92,11 @@ def ring_allreduce_schedule(profile: BandwidthProfile, n: int) -> Schedule:
             deps = (last_recv[(r, c)],)
             lo, hi = int(bounds[c]), int(bounds[c + 1])
             flows.append(Flow(fid=fid, src=r, dst=dst, size=hi - lo,
-                              deps=deps, lo=lo, hi=hi, op=Op.STORE,
+                              deps=fifo(r, deps), lo=lo, hi=hi, op=Op.STORE,
                               key=("rs", c)))
             last_recv[(dst, c)] = fid
+            last_send[r] = fid
             fid += 1
 
     return Schedule(profile=profile, n=n, nic_flows=flows,
-                    meta={"algo": "ring", "p": p})
+                    meta={"algo": "ring", "p": p, "vec_exact": True})

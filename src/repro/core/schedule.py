@@ -247,9 +247,22 @@ def _optcc_single_slotted(profile: BandwidthProfile, n: int, k: int,
     if slot_release:
         flows = [dataclasses.replace(f, release=(f.pri or 0.0))
                  for f in flows]
-    return Schedule(profile=profile, n=n, nic_flows=flows,
-                    meta={"algo": "optcc-single", "k": k, "ell": ell,
-                          "fill": fill, "slotted": True})
+    meta = {"algo": "optcc-single", "k": k, "ell": ell,
+            "fill": fill, "slotted": True}
+    # For l <= 2 the body tiling is exactly collision-free, so forcing every
+    # port to serve its flows strictly in (pri, fid) order (port_inorder: a
+    # NIC draining its transmit queue in schedule order, what a real proxy
+    # thread does) costs nothing and makes completion times an exact
+    # max-plus recurrence, hence vec_exact (core.flowvec). For l > 2 the
+    # slot layout keeps its w=2 Stage-1/4 offsets inside a longer l*ph body;
+    # those offsets are *not* service-order-feasible (Stage-4 drips collide
+    # with later segments' Stage-1 chains), so in-order service adds a
+    # per-segment convoy penalty. Greedy dispatch absorbs those collisions,
+    # so l > 2 keeps opportunistic semantics and the optimized greedy loop.
+    if ell <= 2:
+        meta["port_inorder"] = True
+        meta["vec_exact"] = True
+    return Schedule(profile=profile, n=n, nic_flows=flows, meta=meta)
 
 
 def _optcc_single_legacy(profile: BandwidthProfile, n: int, k: int,

@@ -9,36 +9,94 @@ to exactly the model in which the paper's theory lives (Section 3):
     time units (the slow endpoint throttles the wire);
   * NVLink flows (multi-GPU/server setting) use separate per-rank NVLink
     send/recv ports at (g-1)x the NIC rate and are never degraded;
+  * zero-size flows are local bookkeeping (self-stores), not wire traffic:
+    they complete the moment their dependencies do and never occupy a port;
   * flows start as soon as (a) all declared dependencies have completed and
     (b) both ports are free; among competing ready flows, the lower fid wins
-    (fid encodes the schedule's priority order).
+    (fid encodes the schedule's priority order);
+  * schedules tagged ``meta["port_inorder"]`` (the slotted OptCC
+    construction) serve every port strictly in (pri, fid) order - a NIC
+    executing its transmit queue in schedule order - instead of the greedy
+    opportunistic dispatch arbitrary dependency graphs get.
 
 The same run always produces the same result (no randomness), matching the
 paper's "SimAI is deterministic" setup.
+
+Two implementations produce bit-identical results (enforced by
+tests/test_vectorized_equivalence.py):
+
+  * `simulate_reference` - the scalar event loop below, the semantics oracle;
+  * the vectorized fast path in `core.flowvec` for schedules whose meta
+    carries ``vec_exact: True`` (ring with FIFO sequencing, slotted OptCC):
+    for those graphs port service order is forced, so completion times are
+    the least fixed point of a max-plus recurrence evaluated in numpy blocks.
+
+`simulate` dispatches to the fast path when it is provably exact and falls
+back to the event loop for arbitrary dependency graphs (legacy/multi/
+multi-GPU schedules, hand-built tests).
 """
 from __future__ import annotations
 
 import heapq
 from concurrent.futures import ProcessPoolExecutor
 from concurrent.futures.process import BrokenProcessPool
-from dataclasses import dataclass
-from typing import Callable, Iterable, Sequence
+from typing import Callable, Iterable, Optional, Sequence
+
+import numpy as np
 
 from repro.core.model import BandwidthProfile, Flow, Schedule
 
 
-@dataclass
 class SimResult:
-    makespan: float
-    start: dict[int, float]
-    finish: dict[int, float]
-    # Per-port busy time, for utilization analysis: {(kind, rank, dir): time}
-    port_busy: dict[tuple, float]
+    """Simulation outcome. `start`/`finish`/`port_busy` are materialized
+    lazily: the sweep hot path only reads `makespan`, and building
+    100k-entry dicts per scenario would dominate the vectorized fast path.
+    """
+
+    __slots__ = ("makespan", "_start", "_finish", "_port_busy", "_lazy")
+
+    def __init__(self, makespan: float,
+                 start: Optional[dict] = None,
+                 finish: Optional[dict] = None,
+                 port_busy: Optional[dict] = None,
+                 lazy: Optional[Callable[[], tuple]] = None):
+        self.makespan = makespan
+        self._start = start
+        self._finish = finish
+        self._port_busy = port_busy
+        self._lazy = lazy
+
+    def _materialize(self) -> None:
+        if self._lazy is not None:
+            self._start, self._finish, self._port_busy = self._lazy()
+            self._lazy = None
+
+    @property
+    def start(self) -> dict[int, float]:
+        self._materialize()
+        return self._start
+
+    @property
+    def finish(self) -> dict[int, float]:
+        self._materialize()
+        return self._finish
+
+    @property
+    def port_busy(self) -> dict[tuple, float]:
+        # {(kind, rank, dir): time}, for utilization analysis
+        self._materialize()
+        return self._port_busy
 
     def utilization(self, kind: str, rank: int, direction: str) -> float:
         if self.makespan == 0:
             return 0.0
         return self.port_busy.get((kind, rank, direction), 0.0) / self.makespan
+
+    def __reduce__(self):
+        # Closures don't pickle; materialize before crossing process
+        # boundaries (simulate_many with workers > 0).
+        return (SimResult,
+                (self.makespan, self.start, self.finish, self.port_busy))
 
 
 def _flow_duration(flow: Flow, profile: BandwidthProfile, kind: str) -> float:
@@ -50,7 +108,203 @@ def _flow_duration(flow: Flow, profile: BandwidthProfile, kind: str) -> float:
 
 
 def simulate(schedule: Schedule) -> SimResult:
-    """Run the schedule to completion; returns makespan and per-flow times."""
+    """Run the schedule to completion; returns makespan and per-flow times.
+
+    Dispatches to the vectorized fast path when the schedule certifies it is
+    exact for its structure (``meta["vec_exact"]``), else runs the scalar
+    reference event loop. Both paths agree bit-for-bit on eligible
+    schedules (tests/test_vectorized_equivalence.py).
+    """
+    if schedule.meta.get("vec_exact"):
+        from repro.core import flowvec
+        return flowvec.simulate_arrays(schedule)
+    return _simulate_greedy_fast(schedule)
+
+
+def _simulate_greedy_fast(schedule: Schedule) -> SimResult:
+    """Greedy event loop over columnar arrays: identical semantics and
+    results to `simulate_reference`, ~3x faster (int ports, precomputed
+    durations and priorities, no per-flow dataclass traffic). Used for the
+    schedules whose dispatch is genuinely dynamic (multi-straggler,
+    multi-GPU, hand-built graphs); bit-equality with the reference loop is
+    enforced by tests/test_vectorized_equivalence.py.
+    """
+    from repro.core import flowvec
+
+    fa = schedule.arrays if schedule.arrays is not None \
+        else flowvec.FlowArrays.from_schedule(schedule)
+    n = fa.nflows
+    if n == 0:
+        return SimResult(0.0, {}, {}, {})
+    profile = schedule.profile
+    if fa.nv.any():
+        assert profile.gpus_per_server > 1, \
+            "NVLink flows require gpus_per_server > 1"
+    sl = np.asarray(profile.slowdown, np.float64)
+    dur_a = fa.size * np.maximum(sl[fa.src], sl[fa.dst])
+    if fa.nv.any():
+        dur_a[fa.nv] = fa.size[fa.nv] / profile.nvlink_rate
+    nv4 = fa.nv.astype(np.int64)
+    # Hot per-element access wants plain Python lists, not numpy scalars.
+    dur = dur_a.tolist()
+    size = fa.size.tolist()
+    release = fa.release.tolist()
+    sport = (fa.src * 4 + nv4 * 2).tolist()
+    rport = (fa.dst * 4 + nv4 * 2 + 1).tolist()
+    # Fast-heap mode: with no priorities and no releases (multi/multi-GPU
+    # and most hand-built graphs), (pri, fid) order *is* fid order, so the
+    # waiting heaps can hold plain ints and release wake-ups never happen.
+    simple = bool(np.isnan(fa.pri).all()) and not fa.release.any()
+    pri_key = np.where(np.isnan(fa.pri), np.arange(n, dtype=np.float64),
+                       fa.pri).tolist()
+    dep_counts = np.diff(fa.dep_indptr)
+    ndeps = dep_counts.tolist()
+    nports = 4 * profile.p
+    # Reverse adjacency (dependents) as CSR, built vectorized: group dep
+    # edges by their target fid, keeping each edge's owning row.
+    nnz = len(fa.dep_indices)
+    if nnz:
+        if (fa.dep_indices < 0).any() or (fa.dep_indices >= n).any():
+            bad = fa.dep_indices[(fa.dep_indices < 0)
+                                 | (fa.dep_indices >= n)][0]
+            raise ValueError(f"flow depends on unknown fid {int(bad)}")
+        rows = np.repeat(np.arange(n, dtype=np.int64), dep_counts)
+        grp = np.argsort(fa.dep_indices, kind="stable")
+        dep_rows = rows[grp].tolist()
+        dptr = np.zeros(n + 1, np.int64)
+        np.cumsum(np.bincount(fa.dep_indices, minlength=n), out=dptr[1:])
+        dptr = dptr.tolist()
+    else:
+        dep_rows = []
+        dptr = [0] * (n + 1)
+
+    port_free = [True] * nports
+    waiting: list[list] = [[] for _ in range(nports)]
+    port_busy = [0.0] * nports
+    started = [False] * n
+    woken = [False] * n
+    start_t = [0.0] * n
+    finish_t = [0.0] * n
+    events: list[tuple[float, int, int, bool]] = []
+    seq = 0
+    now = 0.0
+    nfinished = 0
+    push = heapq.heappush
+    pop = heapq.heappop
+
+    def try_start(fid: int) -> bool:
+        nonlocal seq
+        if started[fid]:
+            return True
+        if not simple and release[fid] > now:
+            if not woken[fid]:
+                woken[fid] = True
+                push(events, (release[fid], seq, fid, True))
+                seq += 1
+            return False
+        if size[fid] <= 0:
+            started[fid] = True
+            start_t[fid] = finish_t[fid] = now
+            push(events, (now, seq, fid, False))
+            seq += 1
+            return True
+        sp, rp = sport[fid], rport[fid]
+        if not (port_free[sp] and port_free[rp]):
+            return False
+        port_free[sp] = port_free[rp] = False
+        started[fid] = True
+        d = dur[fid]
+        start_t[fid] = now
+        finish_t[fid] = now + d
+        port_busy[sp] += d
+        port_busy[rp] += d
+        push(events, (now + d, seq, fid, False))
+        seq += 1
+        return True
+
+    def enqueue_ready(fid: int) -> None:
+        if try_start(fid):
+            return
+        entry = fid if simple else (pri_key[fid], fid)
+        push(waiting[sport[fid]], entry)
+        push(waiting[rport[fid]], entry)
+
+    if simple:
+        order0 = range(n)
+    else:
+        order0 = sorted(range(n), key=lambda i: (pri_key[i], i))
+    for fid in order0:
+        if ndeps[fid] == 0:
+            enqueue_ready(fid)
+
+    while events:
+        now = events[0][0]
+        done_batch: list[int] = []
+        wake_batch: list[int] = []
+        while events and events[0][0] == now:
+            _, _, fid, is_wake = pop(events)
+            (wake_batch if is_wake else done_batch).append(fid)
+        newly_ready: list[int] = []
+        freed_ports: list[int] = []
+        for fid in done_batch:
+            nfinished += 1
+            if size[fid] > 0:
+                sp, rp = sport[fid], rport[fid]
+                port_free[sp] = port_free[rp] = True
+                freed_ports.append(sp)
+                freed_ports.append(rp)
+            for j in range(dptr[fid], dptr[fid + 1]):
+                dep = dep_rows[j]
+                ndeps[dep] -= 1
+                if ndeps[dep] == 0:
+                    newly_ready.append(dep)
+        for fid in wake_batch:
+            if not started[fid] and ndeps[fid] == 0:
+                woken[fid] = False
+                try_start(fid)
+        if newly_ready:
+            if simple:
+                newly_ready.sort()
+            else:
+                newly_ready.sort(key=lambda i: (pri_key[i], i))
+            for fid in newly_ready:
+                enqueue_ready(fid)
+        for port in freed_ports:
+            q = waiting[port]
+            blocked: list = []
+            while q and port_free[port]:
+                entry = pop(q)
+                cand = entry if simple else entry[1]
+                if started[cand]:
+                    continue
+                if not try_start(cand):
+                    blocked.append(entry)
+            for entry in blocked:
+                push(q, entry)
+
+    if nfinished != n:
+        stuck = [fid for fid in range(n)
+                 if ndeps[fid] > 0 or not started[fid]]
+        raise RuntimeError(
+            f"deadlock: {len(stuck)}/{n} flows never ran, e.g. "
+            f"{sorted(stuck)[:5]}")
+    makespan = max(finish_t) if n else 0.0
+
+    def materialize():
+        start_d = dict(enumerate(start_t))
+        finish_d = dict(enumerate(finish_t))
+        busy: dict[tuple, float] = {}
+        for pid, b in enumerate(port_busy):
+            if b > 0.0:
+                kind = "nv" if pid & 2 else "nic"
+                busy[(kind, pid // 4, "r" if pid & 1 else "s")] = b
+        return start_d, finish_d, busy
+
+    return SimResult(makespan, lazy=materialize)
+
+
+def simulate_reference(schedule: Schedule) -> SimResult:
+    """Scalar discrete-event loop: the semantics oracle for `simulate`."""
     profile = schedule.profile
     flows: dict[int, tuple[Flow, str]] = {}
     for f in schedule.nic_flows:
@@ -86,6 +340,23 @@ def simulate(schedule: Schedule) -> SimResult:
             port_free.setdefault(port, True)
             waiting.setdefault(port, [])
 
+    def prio(fid: int) -> tuple[float, int]:
+        return flows[fid][0].priority
+
+    # Strict in-order port service (slotted schedules): each port's wire
+    # flows may only start in (pri, fid) order - the NIC drains its transmit
+    # queue in schedule order instead of opportunistically.
+    inorder = bool(schedule.meta.get("port_inorder"))
+    port_head: dict[tuple, int] = {}
+    port_seq: dict[tuple, list[int]] = {}
+    if inorder:
+        for fid in sorted(flows, key=prio):
+            if flows[fid][0].size <= 0:
+                continue
+            for port in ports_of(fid):
+                port_seq.setdefault(port, []).append(fid)
+        port_head = {port: 0 for port in port_seq}
+
     started: set[int] = set()
     finished: set[int] = set()
     woken: set[int] = set()
@@ -110,10 +381,22 @@ def simulate(schedule: Schedule) -> SimResult:
                 woken.add(fid)
                 push_event(f.release, fid, True)
             return False
+        if f.size <= 0:
+            # Bookkeeping flow (self-store): no wire traffic, no ports.
+            started.add(fid)
+            start_t[fid] = finish_t[fid] = now
+            push_event(now, fid, False)
+            return True
         sp, rp = ports_of(fid)
         if not (port_free[sp] and port_free[rp]):
             return False
+        if inorder and (port_seq[sp][port_head[sp]] != fid
+                        or port_seq[rp][port_head[rp]] != fid):
+            return False
         port_free[sp] = port_free[rp] = False
+        if inorder:
+            port_head[sp] += 1
+            port_head[rp] += 1
         started.add(fid)
         dur = _flow_duration(f, profile, kind)
         start_t[fid] = now
@@ -122,9 +405,6 @@ def simulate(schedule: Schedule) -> SimResult:
         port_busy[rp] = port_busy.get(rp, 0.0) + dur
         push_event(now + dur, fid, False)
         return True
-
-    def prio(fid: int) -> tuple[float, int]:
-        return flows[fid][0].priority
 
     def enqueue_ready(fid: int) -> None:
         # Try to start immediately; if blocked, wait on both ports.
@@ -148,9 +428,10 @@ def simulate(schedule: Schedule) -> SimResult:
         freed_ports: list[tuple] = []
         for fid in done_batch:
             finished.add(fid)
-            sp, rp = ports_of(fid)
-            port_free[sp] = port_free[rp] = True
-            freed_ports.extend((sp, rp))
+            if flows[fid][0].size > 0:       # zero flows never held ports
+                sp, rp = ports_of(fid)
+                port_free[sp] = port_free[rp] = True
+                freed_ports.extend((sp, rp))
             for dep in dependents.get(fid, ()):  # release dependents
                 ndeps[dep] -= 1
                 if ndeps[dep] == 0:

@@ -103,7 +103,8 @@ def _summarize(records: Sequence[dict]) -> dict:
 
 
 def build_artifact(results: Sequence[ScenarioResult], profile: str,
-                   seed: int, deterministic: bool) -> dict:
+                   seed: int, deterministic: bool,
+                   schedgen_latency_ms: Optional[float] = None) -> dict:
     records = [scenario_record(r) for r in results]
     families = sorted({r["family"] for r in records})
     return {
@@ -111,6 +112,10 @@ def build_artifact(results: Sequence[ScenarioResult], profile: str,
         "profile": profile,
         "seed": seed,
         "deterministic": deterministic,
+        # Best-of-N descriptor-path re-planning latency at p=1024 (Section
+        # 4.3's < 1 ms claim); None on deterministic runs, where wall-clock
+        # measurements are excluded so artifacts stay byte-identical.
+        "schedgen_latency_ms": _round(schedgen_latency_ms, 6),
         "scenario_count": len(records),
         "summary": {
             "overall": _summarize(records),
@@ -220,4 +225,13 @@ def check_thresholds(artifact: dict, thresholds: dict) -> list[str]:
     if min_scen is not None and artifact["scenario_count"] < min_scen:
         fails.append(f"scenario_count {artifact['scenario_count']} < "
                      f"required {min_scen}")
+    lat_limit = thresholds.get("schedgen_latency_ms_max")
+    if lat_limit is not None:
+        lat = artifact.get("schedgen_latency_ms")
+        # None = deterministic run (latency deliberately unmeasured); the
+        # gate only fires on measured values.
+        if lat is not None and lat > lat_limit:
+            fails.append(f"schedule-generation latency at p=1024: "
+                         f"{lat:.6g} ms > limit {lat_limit:.6g} ms "
+                         f"(schedgen_latency_ms)")
     return fails

@@ -19,7 +19,7 @@ import time
 from typing import Optional, Sequence
 
 from repro.core.planner import make_plan
-from repro.core.ring import ring_allreduce_schedule
+from repro.core.schedule_vec import ring_arrays
 from repro.core.simulator import map_scenarios, simulate
 from repro.sweeps.scenarios import GRIDS, ScenarioSpec
 
@@ -66,7 +66,7 @@ def run_scenario(spec: ScenarioSpec,
     """Plan + simulate + score one scenario."""
     profile = spec.profile()
     plan = make_plan(profile, spec.n, k=spec.k,
-                     fill_bubbles=spec.fill_bubbles)
+                     fill_bubbles=spec.fill_bubbles, materialize="arrays")
     t_sim0 = time.perf_counter()
     t_optcc = simulate(plan.schedule).makespan
     sim_seconds = time.perf_counter() - t_sim0
@@ -77,7 +77,7 @@ def run_scenario(spec: ScenarioSpec,
             t_ring = t_optcc          # healthy: the plan already is the ring
         else:
             t_ring0 = time.perf_counter()
-            t_ring = simulate(ring_allreduce_schedule(profile, spec.n)).makespan
+            t_ring = simulate(ring_arrays(profile, spec.n)).makespan
             ring_sim_seconds = time.perf_counter() - t_ring0
     return ScenarioResult(
         spec=spec,

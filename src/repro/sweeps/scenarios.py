@@ -217,12 +217,20 @@ def smoke_grid(seed: int = 0) -> list[ScenarioSpec]:
 
 
 def full_grid(seed: int = 0) -> list[ScenarioSpec]:
-    """Nightly-sized: thousands of scenarios up to p=64, deeper pipelines."""
+    """Nightly-sized: thousands of scenarios up to p=64 at every depth, plus
+    a paper-scale p=1024 block (Section 4.3 runs at p=1024; the vectorized
+    generator + simulator make ~8M-flow scenarios minutes, not hours)."""
     rng = random.Random(seed)
     specs: list[ScenarioSpec] = []
     specs += gen_healthy(ps=(4, 8, 16, 32, 64), ks=(4, 16, 32))
     specs += gen_single(ps=(4, 8, 16, 32, 64), ks=(4, 16, 32),
                         positions=(0.0, 0.25, 0.5))
+    # Paper-scale block: p=256 and p=1024 single stragglers. One straggler
+    # position (OptCC is position-invariant; the small-p blocks above sweep
+    # positions) and shallow k to keep flow counts ~p^2 k bounded.
+    specs += gen_healthy(ps=(256, 1024), ks=(4,))
+    specs += gen_single(ps=(256, 1024), ks=(4,),
+                        ells=(8 / 7, 2.0, 4.0), positions=(0.5,))
     specs += gen_multi(
         ps=(8, 16, 32, 64), ks=(4, 16),
         ell_sets=((4 / 3, 8 / 7), (2.0, 4 / 3), (2.0, 2.0), (4.0, 2.0),

@@ -22,9 +22,13 @@ def test_plan_degraded_is_optcc():
 
 
 def test_plan_overhead_small_for_half_bandwidth():
-    """Paper abstract: l <= 2 => overhead O(1/p)."""
+    """Paper abstract: l <= 2 => overhead O(1/p) - asymptotically in k.
+    The calibrated prediction charges the true ~5(p-1)s pipeline head, which
+    at k=16 is still a 29% overhead; by k=64 it has amortized below 8%.
+    (The pre-calibration formula under-counted the head and made this pass
+    at k=16.)"""
     plan = make_plan(BandwidthProfile.single_straggler(128, 2.0),
-                     n=127 * 16 * 10, k=16)
+                     n=127 * 64 * 10, k=64)
     assert plan.predicted_overhead < 1.13
 
 
@@ -40,6 +44,33 @@ def test_generation_speed_p1024():
     assert len(plan.descriptor["slots"]) == 1023 * 4
     assert plan.schedule is None
     assert dt < 1.0  # descriptor path; paper claims ~1 ms, allow CI slack
+
+
+def test_descriptor_slots_nonnegative():
+    """All slot offsets are valid times - in particular for small n, where
+    the old raw -2/-4 constants (elements, not element-times) drove the
+    S2/S3 slots negative."""
+    from repro.core.planner import plan_descriptor
+    for n in (8, 64, 1024):
+        desc = plan_descriptor(BandwidthProfile.single_straggler(8, 1.5),
+                               n=n, k=2)
+        for key, (nu, *times) in desc["slots"].items():
+            assert all(t >= 0.0 for t in times), (n, key, times)
+
+
+def test_descriptor_linear_in_n():
+    """Slot offsets are element-times: doubling n doubles every offset
+    exactly (unit consistency; the raw -2/-4 constants broke this)."""
+    from repro.core.planner import plan_descriptor
+    prof = BandwidthProfile.single_straggler(16, 1.3)
+    d1 = plan_descriptor(prof, n=15 * 4 * 12, k=4)
+    d2 = plan_descriptor(prof, n=2 * 15 * 4 * 12, k=4)
+    assert d1["slots"].keys() == d2["slots"].keys()
+    for key, (nu1, *t1) in d1["slots"].items():
+        nu2, *t2 = d2["slots"][key]
+        assert nu1 == nu2
+        for a, b in zip(t1, t2):
+            assert b == pytest.approx(2.0 * a, rel=1e-12)
 
 
 def test_plan_multi_variants():

@@ -1,15 +1,16 @@
-"""Timing validation: simulated schedules vs the paper's closed forms.
+"""Timing validation: simulated schedules vs the calibrated closed forms.
 
-Calibrated tolerances (measured, see EXPERIMENTS.md):
-  * ring on healthy profile: exactly T0.
-  * OptCC single straggler (exact slotted construction): within a few % of
-    Eq. (1)/(2); the deviation is the 4-body pipeline head (vs the paper's
-    1-body head), shrinking as k grows.
-  * multi-straggler: at or below the Appendix D.3 closed form (our spread
-    variant slightly beats it), above the Theorem-2 bound.
-  * multi-GPU: within ~45% of Appendix E.4 under the paper's minimal
-    (g-1)x NVLink provisioning (zero-slack packing; the paper's N/S
-    alternation would close this), within ~15% under DGX-realistic 12x.
+lower_bounds.optcc_time is calibrated against the simulator (constants
+documented in that module); the contract these tests pin down:
+  * ring on healthy profile: exactly 2(p-1)n/p (flat ring over NICs).
+  * OptCC single straggler, l >= 2, p >= 5: bit-exact closed form; l < 2
+    within ~3.5% (greedy bubble filling shifts a few slots).
+  * every regime (healthy / single / multi / multi-GPU at minimal NVLink):
+    |sim/pred - 1| <= 10% at k=4 (test_predicted_time_within_10pct).
+  * DGX-realistic 12x NVLink is deliberately NOT separately calibrated: the
+    multi-GPU form assumes the paper's minimal (g-1)x provisioning and
+    conservatively over-predicts when NVLink is faster, so the 12x case is
+    excluded from the 10% gate and pinned one-sided instead.
 """
 import dataclasses
 
@@ -52,7 +53,7 @@ def test_optcc_single_matches_closed_form(p, ell):
     t = sim_time(BandwidthProfile.single_straggler(p, ell), n, k)
     pred = lb.optcc_time(p, n, [ell], k)
     assert t >= lb.lower_bound(p, n, [ell]) * 0.999
-    assert t <= 1.16 * pred          # 4-body head + bounded slot delays
+    assert t <= 1.03 * pred   # calibrated form; l >= 2 is bit-exact
 
 
 def test_optcc_single_converges_with_k():
@@ -140,6 +141,82 @@ def test_optcc_multi_gpu_time_dgx_nvlink(ell):
         BandwidthProfile.single_straggler(p, ell, g=g), nvlink_mult=12.0)
     t = sim_time(prof, n, k)
     assert t <= 1.15 * lb.optcc_time_multi_gpu(p, n, ell, g, k)
+
+
+# One case per calibrated regime, k=4, biased toward the worst residuals
+# found during calibration (mgpu g=8 q=4 and g=4 l=4/3 sit ~9.4% off; the
+# rest are well inside). nvlink_mult=12 is excluded by design - see module
+# docstring.
+TEN_PCT_CASES = [
+    ("healthy", 8, 1, None),
+    ("healthy", 32, 2, None),
+    ("single", 4, 1, 1.5),
+    ("single", 8, 1, 8.0 / 7.0),
+    ("single", 16, 1, 2.0),
+    ("single", 32, 1, 4.0 / 3.0),
+    ("single", 64, 1, 4.0),
+    ("multi", 16, 1, (2.0, 2.0)),
+    ("multi", 16, 1, (1.5, 1.3)),
+    ("multi", 32, 1, (2.5, 2.5, 2.5)),
+    ("multi", 8, 1, (8.0, 2.0)),
+    ("mgpu", 8, 2, 2.0),
+    ("mgpu", 16, 2, 8.0 / 7.0),
+    ("mgpu", 32, 4, 4.0 / 3.0),
+    ("mgpu", 16, 4, 4.0),
+    ("mgpu", 32, 8, 4.0 / 3.0),
+    ("mgpu", 64, 8, 2.0),
+]
+
+
+@pytest.mark.parametrize("regime,p,g,ells", TEN_PCT_CASES)
+def test_predicted_time_within_10pct(regime, p, g, ells):
+    """lower_bounds.optcc_time is operator-grade: within 10% of the
+    simulator at k=4 in every calibrated regime (and never below the lower
+    bound). Targets the OptCC generators directly - the planner may fall
+    back to the ring when OptCC's fill overhead loses at shallow k, which
+    would mask the calibration being checked here."""
+    from repro.core.schedule_vec import optcc_schedule_arrays, ring_arrays
+    k = 4
+    if regime == "healthy":
+        prof = BandwidthProfile.healthy(p, g=g)
+        n = 4 * p * 48
+        t = simulate(ring_arrays(prof, n)).makespan
+        pred = lb.optcc_time(prof.p, n, [], k, g)
+        lbound = lb.lower_bound(prof.p, n, [], g)
+    else:
+        if regime == "single":
+            prof = BandwidthProfile.single_straggler(p, ells,
+                                                     straggler=p // 2)
+            n = k * (p - 1) * 48
+            pred_ells = [ells]
+        elif regime == "multi":
+            prof = BandwidthProfile.multi_straggler(p, list(ells))
+            n = k * (p - len(ells)) * 48
+            pred_ells = list(ells)
+        else:
+            q = p // g
+            prof = BandwidthProfile.single_straggler(p, ells, straggler=1,
+                                                     g=g)
+            n = g * k * (q - 1) * 48
+            pred_ells = [ells]
+        t = simulate(optcc_schedule_arrays(prof, n, k)).makespan
+        pred = lb.optcc_time(prof.p, n, pred_ells, k, g)
+        lbound = lb.lower_bound(prof.p, n, pred_ells, g)
+    assert t >= lbound * (1 - 1e-9)
+    assert abs(t / pred - 1.0) <= 0.10
+
+
+@pytest.mark.parametrize("p", [8, 16])
+def test_ring_degraded_monotone_in_ell(p):
+    """FIFO send sequencing makes the degraded ring convoy-stable: makespan
+    is non-decreasing in the straggler severity (greedy dispatch without the
+    FIFO deps showed jitter where a *slower* link finished *earlier*)."""
+    n = 480 * p
+    prev = 0.0
+    for ell in (1.0, 1.2, 1.5, 2.0, 2.5, 3.0, 4.0, 6.0):
+        t = sim_time(BandwidthProfile.single_straggler(p, ell), n)
+        assert t >= prev - 1e-9, f"ring time dropped at ell={ell}"
+        prev = t
 
 
 def test_no_port_overlap_invariant():

@@ -1,0 +1,203 @@
+"""Vectorized == scalar, bit-for-bit.
+
+The vectorized generators (core.schedule_vec) and the vectorized simulator
+fast paths (core.flowvec.simulate_arrays, simulator._simulate_greedy_fast)
+are pure performance rewrites: for every supported profile they must produce
+the *identical* flow graph and the *identical* IEEE-754 timing as the scalar
+reference implementations (core.schedule / core.ring generators,
+simulator.simulate_reference event loop). This file is the contract the
+docstrings in simulator.py / flowvec.py / schedule_vec.py point at.
+
+Two layers of checks:
+  * graph equality: the columnar FlowArrays emitted by each vectorized
+    generator equals FlowArrays.from_schedule(scalar generator output) -
+    same endpoints, sizes, releases, priorities, NVLink flags, and the same
+    dependency sets per flow;
+  * timing equality: simulate() on the vectorized schedule returns the
+    bit-identical makespan to simulate_reference() on the scalar schedule.
+
+A deterministic seeded sweep always runs; a hypothesis property test widens
+the search when hypothesis is installed (it is not a dependency).
+"""
+import random
+
+import numpy as np
+import pytest
+
+from repro.core import (BandwidthProfile, optcc_schedule,
+                        ring_allreduce_schedule, simulate)
+from repro.core.flowvec import FlowArrays
+from repro.core.schedule_vec import optcc_schedule_arrays, ring_arrays
+from repro.core.simulator import simulate_reference
+
+
+def _arrays_of(schedule) -> FlowArrays:
+    if schedule.arrays is not None:
+        return schedule.arrays
+    return FlowArrays.from_schedule(schedule)
+
+
+def _assert_same_graph(vec: FlowArrays, ref: FlowArrays) -> None:
+    assert vec.nflows == ref.nflows
+    np.testing.assert_array_equal(vec.src, ref.src)
+    np.testing.assert_array_equal(vec.dst, ref.dst)
+    np.testing.assert_array_equal(vec.size, ref.size)
+    np.testing.assert_array_equal(vec.release, ref.release)
+    np.testing.assert_array_equal(vec.nv, ref.nv)
+    # NaN-aware priority comparison (NaN = unset, must match positionally).
+    assert np.array_equal(vec.pri, ref.pri, equal_nan=True)
+    # Dependencies are a *set* per flow (the simulator maxes over them), so
+    # compare each flow's CSR slice order-insensitively.
+    np.testing.assert_array_equal(vec.dep_indptr, ref.dep_indptr)
+    for i in range(vec.nflows):
+        a, b = vec.dep_indptr[i], vec.dep_indptr[i + 1]
+        assert sorted(vec.dep_indices[a:b]) == sorted(ref.dep_indices[a:b]), \
+            f"flow {i} deps differ"
+
+
+def _profile_for(regime: str, p: int, g: int, ells) -> BandwidthProfile:
+    if regime == "healthy":
+        return BandwidthProfile.healthy(p, g=g)
+    if regime in ("single", "ring-degraded"):
+        return BandwidthProfile.single_straggler(p, ells, straggler=p // 3)
+    if regime == "multi":
+        return BandwidthProfile.multi_straggler(p, list(ells))
+    return BandwidthProfile.single_straggler(p, ells, straggler=g and 1, g=g)
+
+
+CASES = [
+    # regime, p, g, ells, n, k
+    ("healthy", 6, 1, None, 6 * 37, 1),
+    ("healthy", 16, 1, None, 16 * 24 + 5, 1),
+    ("ring-degraded", 8, 1, 1.5, 8 * 30, 1),     # ICCL baseline path
+    ("ring-degraded", 12, 1, 8.0 / 7.0, 12 * 21 + 5, 1),
+    ("single", 8, 1, 1.5, 7 * 4 * 12, 4),      # fill path (l < 2)
+    ("single", 8, 1, 3.0, 7 * 4 * 12, 4),      # no-fill path (l >= 2)
+    ("single", 16, 1, 8.0 / 7.0, 15 * 3 * 16 + 11, 3),   # ragged n
+    ("single", 5, 1, 2.0, 4 * 2 * 10, 2),      # smallest slotted p
+    ("multi", 12, 1, (1.5, 2.0), 10 * 4 * 9, 4),
+    ("multi", 16, 1, (4.0 / 3.0, 8.0 / 7.0, 2.0), 13 * 2 * 8 + 3, 2),
+    ("mgpu", 8, 2, 1.5, 2 * 4 * 3 * 10, 4),    # ordering A/B, q=4
+    ("mgpu", 12, 2, 2.5, 2 * 2 * 5 * 8 + 7, 2),   # odd q=6... ragged n
+    ("mgpu", 12, 4, 4.0 / 3.0, 4 * 3 * 2 * 12, 3),   # q=3 minimum
+    ("mgpu", 32, 4, 2.0, 4 * 2 * 7 * 6 + 1, 2),
+    ("mgpu", 24, 8, 3.0, 8 * 2 * 2 * 15, 2),
+]
+
+
+@pytest.mark.parametrize("regime,p,g,ells,n,k", CASES)
+def test_generator_graphs_bit_equal(regime, p, g, ells, n, k):
+    prof = _profile_for(regime, p, g, ells)
+    if regime in ("healthy", "ring-degraded"):
+        scalar = ring_allreduce_schedule(prof, n)
+        vec = ring_arrays(prof, n)
+    else:
+        scalar = optcc_schedule(prof, n, k)
+        vec = optcc_schedule_arrays(prof, n, k)
+    _assert_same_graph(_arrays_of(vec), _arrays_of(scalar))
+
+
+@pytest.mark.parametrize("regime,p,g,ells,n,k", CASES)
+def test_simulated_times_bit_equal(regime, p, g, ells, n, k):
+    """simulate() on the vectorized schedule == the scalar event loop on the
+    scalar schedule, bit-for-bit (covers both the max-plus recurrence fast
+    path for vec_exact schedules and the greedy columnar loop)."""
+    prof = _profile_for(regime, p, g, ells)
+    if regime in ("healthy", "ring-degraded"):
+        scalar = ring_allreduce_schedule(prof, n)
+        vec = ring_arrays(prof, n)
+    else:
+        scalar = optcc_schedule(prof, n, k)
+        vec = optcc_schedule_arrays(prof, n, k)
+    t_vec = simulate(vec).makespan
+    t_ref = simulate_reference(scalar).makespan
+    assert t_vec == t_ref          # bitwise, no tolerance
+
+
+def test_greedy_fast_path_matches_reference_per_flow():
+    """The columnar greedy loop agrees with the reference event loop on
+    every flow's start/finish, not just the makespan."""
+    prof = BandwidthProfile.multi_straggler(12, [1.5, 2.0])
+    sched = optcc_schedule(prof, 10 * 4 * 9, 4)
+    fast = simulate(sched)
+    ref = simulate_reference(sched)
+    assert fast.makespan == ref.makespan
+    assert fast.start == ref.start
+    assert fast.finish == ref.finish
+
+
+def test_randomized_equivalence_seeded():
+    """Deterministic randomized sweep (always runs, no hypothesis needed)."""
+    rng = random.Random(20260809)
+    for _ in range(20):
+        regime = rng.choice(["healthy", "single", "multi", "mgpu"])
+        if regime == "mgpu":
+            g = rng.choice([2, 4])
+            q = rng.randint(3, 6)
+            p = g * q
+            ells = rng.choice([1.25, 1.5, 2.0, 3.0])
+        else:
+            g = 1
+            p = rng.randint(5, 20)
+            q = None
+            if regime == "single":
+                ells = rng.choice([8.0 / 7.0, 1.5, 2.0, 4.0])
+            elif regime == "multi":
+                m = rng.randint(2, min(4, p - 2))
+                ells = tuple(rng.choice([1.3, 1.5, 2.0, 2.5])
+                             for _ in range(m))
+            else:
+                ells = None
+        k = rng.randint(1, 6)
+        units = p - (len(ells) if isinstance(ells, tuple) else 1)
+        n = k * max(units, 1) * rng.randint(8, 24) + rng.randint(0, 13)
+        prof = _profile_for(regime, p, g, ells)
+        if regime == "healthy":
+            scalar = ring_allreduce_schedule(prof, n)
+            vec = ring_arrays(prof, n)
+        else:
+            scalar = optcc_schedule(prof, n, k)
+            vec = optcc_schedule_arrays(prof, n, k)
+        tag = (regime, p, g, ells, n, k)
+        _assert_same_graph(_arrays_of(vec), _arrays_of(scalar))
+        assert simulate(vec).makespan == \
+            simulate_reference(scalar).makespan, tag
+
+
+# ---------------------------------------------------------------------------
+# Optional hypothesis widening (hypothesis is not a project dependency; the
+# importorskip lives inside the test so only THIS test skips without it).
+# ---------------------------------------------------------------------------
+def test_property_vec_equals_scalar():
+    hyp = pytest.importorskip("hypothesis")
+    st = pytest.importorskip("hypothesis.strategies")
+
+    @hyp.settings(max_examples=25, deadline=None)
+    @hyp.given(data=st.data())
+    def run(data):
+        regime = data.draw(st.sampled_from(["single", "multi", "mgpu"]))
+        if regime == "mgpu":
+            g = data.draw(st.sampled_from([2, 4, 8]))
+            q = data.draw(st.integers(3, 8))
+            p = g * q
+            ells = data.draw(st.floats(1.05, 8.0))
+        else:
+            g = 1
+            p = data.draw(st.integers(5, 32))
+            if regime == "single":
+                ells = data.draw(st.floats(1.05, 8.0))
+            else:
+                m = data.draw(st.integers(2, min(4, p - 2)))
+                ells = tuple(data.draw(st.floats(1.05, 4.0))
+                             for _ in range(m))
+        k = data.draw(st.integers(1, 8))
+        units = p - (len(ells) if isinstance(ells, tuple) else 1)
+        n = k * units * data.draw(st.integers(4, 32)) + data.draw(
+            st.integers(0, 17))
+        prof = _profile_for(regime, p, g, ells)
+        scalar = optcc_schedule(prof, n, k)
+        vec = optcc_schedule_arrays(prof, n, k)
+        _assert_same_graph(_arrays_of(vec), _arrays_of(scalar))
+        assert simulate(vec).makespan == simulate_reference(scalar).makespan
+
+    run()
