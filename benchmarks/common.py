@@ -12,6 +12,7 @@ from __future__ import annotations
 from repro.core.model import BandwidthProfile
 from repro.sweeps.engine import ScenarioResult, run_scenario
 from repro.sweeps.scenarios import ScenarioSpec
+from repro.sweeps.stats import summarize
 
 
 def spec_for(profile: BandwidthProfile, n: int, k: int, name: str = "bench",
@@ -40,6 +41,12 @@ def wall(r: ScenarioResult) -> float:
 
 def row(name, wall_s, derived, note=""):
     return (name, wall_s * 1e6, derived, note)
+
+
+def pct_rows(prefix, values, note=""):
+    """One CSV row per summary statistic (p50/p99/max) of a sample."""
+    return [row(f"{prefix}_{tag}", 0.0, v, note)
+            for tag, v in summarize(values).items()]
 
 
 def emit(rows):

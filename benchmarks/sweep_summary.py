@@ -9,14 +9,15 @@ from __future__ import annotations
 import os
 
 from repro.sweeps import build_artifact, run_sweep, smoke_grid
-from benchmarks.common import row
+from benchmarks.common import pct_rows, row
 
 
 def run():
     specs = smoke_grid(seed=0)[::4]          # every 4th scenario: ~1/4 cost
-    results = run_sweep(specs, workers=min(os.cpu_count() or 1, 8))
+    results = run_sweep(specs, workers=min(os.cpu_count() or 1, 8),
+                        telemetry=True)
     art = build_artifact(results, profile="smoke/4", seed=0,
-                         deterministic=False)
+                         deterministic=False, telemetry=True)
     rows = []
     for group, stats in [("all", art["summary"]["overall"])] + \
             sorted(art["summary"]["by_family"].items()):
@@ -24,4 +25,14 @@ def run():
                     "optcc_vs_lb_p99"):
             rows.append(row(f"sweep_{group}_{key}", 0.0, stats[key],
                             f"count={stats['count']}"))
+    # Degraded-ring (ICCL baseline) overhead distribution - the artifact
+    # summary doesn't carry it, so derive it from the raw results here.
+    ring_ov = [r.overhead_ring for r in results if r.overhead_ring is not None]
+    if ring_ov:
+        rows.extend(pct_rows("sweep_all_overhead_ring", ring_ov,
+                             f"count={len(ring_ov)}"))
+    # Per-stage critical-path p99 overheads (telemetry summaries).
+    for stage, st in sorted(art["summary"]["overall"]["stages"].items()):
+        rows.append(row(f"sweep_stage_{stage.replace(':', '_')}_p99", 0.0,
+                        st["overhead_p99"], f"count={st['count']}"))
     return rows

@@ -113,12 +113,13 @@ def _port_predecessors(order_pos: np.ndarray, port_id: np.ndarray,
     pred[ps[1:][same]] = ps[:-1][same]
 
 
-def simulate_arrays(schedule: Schedule):
+def simulate_arrays(schedule: Schedule, telemetry: bool = False):
     """Vectorized max-plus replay of a `vec_exact` schedule.
 
     Bit-identical to `simulate_reference` on eligible schedules: every start
     is the max of the same IEEE values the event loop would have observed,
-    and every finish is the same single addition.
+    and every finish is the same single addition. ``telemetry=True``
+    attaches a post-hoc `repro.obs.FlowTelemetry` (timings unchanged).
     """
     from repro.core.simulator import SimResult   # circular at module load
 
@@ -246,4 +247,8 @@ def simulate_arrays(schedule: Schedule):
             busy[(k, b_, "r")] = busy.get((k, b_, "r"), 0.0) + d
         return start_d, finish_d, busy
 
-    return SimResult(makespan, lazy=materialize)
+    res = SimResult(makespan, lazy=materialize)
+    if telemetry:
+        from repro.core.simulator import _attach_telemetry
+        res = _attach_telemetry(schedule, res)
+    return res

@@ -22,6 +22,27 @@ import enum
 from typing import Optional, Sequence
 
 
+# Canonical pipeline-stage vocabulary for flow tagging (observability layer).
+# Generators stamp every flow with one of these so telemetry / critical-path
+# attribution can localize a regression to a stage instead of a scalar:
+#   S1-S4  the paper's OptCC stages (reduce-scatter chain, upload to the
+#          straggler, download from the straggler, allgather); the multi-
+#          straggler schedule reuses them per its ordering-B flavour
+#          (uploads = S3, ring = S1, allgather = S4, downloads = S2);
+#   RS/AG  plain ring reduce-scatter / allgather rounds;
+#   SELF   zero-size local bookkeeping flows (never wire traffic);
+#   STAR   Appendix-C star flows where they are separate wire transfers
+#          (legacy generator; the slotted construction merges them into
+#          S2/S3);
+#   N1-N4  the multi-GPU NVLink phases (collect healthy / distribute
+#          straggler / collect straggler / distribute healthy).
+# Stage ids live in ``Schedule.meta["stage_ids"]`` (int16 array indexed by
+# fid) - metadata only, never consulted by the simulator's timing paths.
+STAGE_NAMES = ("S1", "S2", "S3", "S4", "RS", "AG", "SELF", "STAR",
+               "N1", "N2", "N3", "N4")
+STAGE_ID = {name: i for i, name in enumerate(STAGE_NAMES)}
+
+
 class Op(enum.Enum):
     """What the receiver does with an incoming flow's payload.
 

@@ -97,7 +97,11 @@ def plan_descriptor(profile: BandwidthProfile, n: int, k: int) -> dict:
     cols[:, :, 3] = (m + 3) * body + (2.0 * nu - 4.0) * s_i  # S3 slot
     cols[:, :, 4] = (m + 3) * body + (2.0 * nu + 2.0 * ph - 3.0) * s_i  # S4
     return {"algo": "optcc" if stragglers else "ring", "k": k,
-            "body": body, "slots": _SlotTable(cols)}
+            "body": body, "slots": _SlotTable(cols),
+            # Column semantics for columns 1..4 of the slot table, matching
+            # the stage vocabulary flows are tagged with (model.STAGE_NAMES)
+            # so telemetry breakdowns line up with planned slot starts.
+            "stage_slots": ("S1", "S2", "S3", "S4")}
 
 
 def make_plan(profile: BandwidthProfile, n: int, k: int = 16,

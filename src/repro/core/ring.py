@@ -30,7 +30,7 @@ from __future__ import annotations
 
 import numpy as np
 
-from repro.core.model import BandwidthProfile, Flow, Op, Schedule
+from repro.core.model import STAGE_ID, BandwidthProfile, Flow, Op, Schedule
 
 
 def split_points(n: int, parts: int) -> np.ndarray:
@@ -98,5 +98,11 @@ def ring_allreduce_schedule(profile: BandwidthProfile, n: int) -> Schedule:
             last_send[r] = fid
             fid += 1
 
+    # Stage tags by fid-block: (p-1)*p RS rounds, p self-stores, (p-1)*p AG.
+    stage_ids = np.empty(len(flows), np.int16)
+    stage_ids[:(p - 1) * p] = STAGE_ID["RS"]
+    stage_ids[(p - 1) * p:p * p] = STAGE_ID["SELF"]
+    stage_ids[p * p:] = STAGE_ID["AG"]
     return Schedule(profile=profile, n=n, nic_flows=flows,
-                    meta={"algo": "ring", "p": p, "vec_exact": True})
+                    meta={"algo": "ring", "p": p, "vec_exact": True,
+                          "stage_ids": stage_ids})

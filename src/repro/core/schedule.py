@@ -29,7 +29,7 @@ from __future__ import annotations
 
 import numpy as np
 
-from repro.core.model import BandwidthProfile, Flow, Op, Schedule
+from repro.core.model import STAGE_ID, BandwidthProfile, Flow, Op, Schedule
 from repro.core.ring import ring_allreduce_schedule, split_points
 
 
@@ -38,52 +38,66 @@ from repro.core.ring import ring_allreduce_schedule, split_points
 # ----------------------------------------------------------------------------
 
 class _FlowList:
-    """Flow accumulator handing out monotonically increasing fids."""
+    """Flow accumulator handing out monotonically increasing fids.
+
+    Every flow carries a pipeline-stage tag (model.STAGE_NAMES) recorded in
+    fid order; the finished array lands in ``Schedule.meta["stage_ids"]``
+    for the observability layer. Tags are metadata only - the simulator's
+    timing paths never read them.
+    """
 
     def __init__(self):
         self.nic: list[Flow] = []
         self.nv: list[Flow] = []
+        self.stages: list[int] = []
 
     def add(self, src, dst, size, deps, lo, hi, op, key, nvlink=False,
-            pri=None, extra=()) -> int:
+            pri=None, extra=(), stage="SELF") -> int:
         fid = len(self.nic) + len(self.nv)
         f = Flow(fid=fid, src=src, dst=dst, size=float(size),
                  deps=tuple(deps), lo=lo, hi=hi, op=op, key=key, pri=pri,
                  extra=tuple(extra))
         (self.nv if nvlink else self.nic).append(f)
+        self.stages.append(STAGE_ID[stage])
         return fid
+
+    def stage_ids(self) -> np.ndarray:
+        return np.asarray(self.stages, np.int16)
 
 
 def _ring_chain(fl: _FlowList, nodes: list[int], lo: int, hi: int, key: tuple,
                 first_deps=(), per_node_deps=None, pri0=None, pri_step=0.0,
-                nvlink=False) -> int:
+                nvlink=False, stage="S1") -> int:
     """ACCUM chain nodes[0] -> nodes[1] -> ... -> nodes[-1]; returns last fid.
 
     per_node_deps: optional {node_rank: [extra fids]} added to the *outgoing*
     flow of that node (used to fold straggler uploads / NVLink collects in
     before a node forwards). pri0/pri_step: slotted priorities per hop.
+    stage: one tag for every hop, or a per-hop sequence (ordering-B chains
+    start with the straggler's S3 upload, then continue as S1 hops).
     """
     last = None
+    per_hop = not isinstance(stage, str)
     for t, (a, b) in enumerate(zip(nodes[:-1], nodes[1:])):
         deps = list(first_deps) if last is None else [last]
         if per_node_deps:
             deps.extend(per_node_deps.get(a, ()))
         pri = None if pri0 is None else pri0 + t * pri_step
         last = fl.add(a, b, hi - lo, deps, lo, hi, Op.ACCUM, key, pri=pri,
-                      nvlink=nvlink)
+                      nvlink=nvlink, stage=stage[t] if per_hop else stage)
     return last
 
 
 def _store_chain(fl: _FlowList, nodes: list[int], lo: int, hi: int, key: tuple,
                  first_deps=(), pri0=None, pri_step=0.0,
-                 nvlink=False) -> list[int]:
+                 nvlink=False, stage="S4") -> list[int]:
     """STORE forward chain; returns fids (one per hop)."""
     fids, last = [], None
     for t, (a, b) in enumerate(zip(nodes[:-1], nodes[1:])):
         deps = list(first_deps) if last is None else [last]
         pri = None if pri0 is None else pri0 + t * pri_step
         last = fl.add(a, b, hi - lo, deps, lo, hi, Op.STORE, key, pri=pri,
-                      nvlink=nvlink)
+                      nvlink=nvlink, stage=stage)
         fids.append(last)
     return fids
 
@@ -214,7 +228,7 @@ def _optcc_single_slotted(profile: BandwidthProfile, n: int, k: int,
             extra = ((blo, bhi, Op.ACCUM, ("star", m)),) if c > 0 else ()
             s2_of[j] = fl.add(owner, s_rank, (hi - lo) + c, [s1_of[j]],
                               lo, hi, Op.ACCUM, key,
-                              pri=slot2(m, nu), extra=extra)
+                              pri=slot2(m, nu), extra=extra, stage="S2")
         ups = [f for f in s2_of if f is not None]
         if c > 0 and ups:
             # straggler's own star-block output (local, zero wire time).
@@ -232,7 +246,8 @@ def _optcc_single_slotted(profile: BandwidthProfile, n: int, k: int,
             extra = ((pblo, pbhi, Op.STORE, ("star", m - 1)),) if pc else ()
             deps3 = [s2_of[j]] + (prev_ups if pc else [])
             s3 = fl.add(s_rank, owner, (hi - lo) + pc, deps3, lo, hi,
-                        Op.STORE, key, pri=slot3(m, nu), extra=extra)
+                        Op.STORE, key, pri=slot3(m, nu), extra=extra,
+                        stage="S3")
             # straggler's own section output.
             fl.add(s_rank, s_rank, 0.0, [s2_of[j]], lo, hi, Op.STORE, key)
             ag = [healthy[(nu + t) % ph] for t in range(ph)]
@@ -248,7 +263,7 @@ def _optcc_single_slotted(profile: BandwidthProfile, n: int, k: int,
         flows = [dataclasses.replace(f, release=(f.pri or 0.0))
                  for f in flows]
     meta = {"algo": "optcc-single", "k": k, "ell": ell,
-            "fill": fill, "slotted": True}
+            "fill": fill, "slotted": True, "stage_ids": fl.stage_ids()}
     # For l <= 2 the body tiling is exactly collision-free, so forcing every
     # port to serve its flows strictly in (pri, fid) order (port_inorder: a
     # NIC draining its transmit queue in schedule order, what a real proxy
@@ -317,11 +332,13 @@ def _optcc_single_legacy(profile: BandwidthProfile, n: int, k: int,
                                  pri0=t_s1, pri_step=s_ideal)
                 # S2: owner uploads healthy partial; straggler folds own.
                 s2 = fl.add(owner, s_rank, hi - lo, [s1], lo, hi,
-                            Op.ACCUM, key, pri=t_s23 + j * slot_w)
+                            Op.ACCUM, key, pri=t_s23 + j * slot_w,
+                            stage="S2")
                 # S3: straggler downloads global sum to owner.
                 s3 = fl.add(s_rank, owner, hi - lo, [s2], lo, hi,
                             Op.STORE, key,
-                            pri=t_s23 + j * slot_w + ell * s_ideal)
+                            pri=t_s23 + j * slot_w + ell * s_ideal,
+                            stage="S3")
                 # straggler's own output (zero-cost self store).
                 fl.add(s_rank, s_rank, 0.0, [s2], lo, hi, Op.STORE, key)
                 # S4: allgather among healthy from owner.
@@ -334,7 +351,10 @@ def _optcc_single_legacy(profile: BandwidthProfile, n: int, k: int,
                 chain = [s_rank] + [healthy[(entry_idx + t) % ph]
                                     for t in range(ph)]
                 owner = chain[-1]
-                s1 = _ring_chain(fl, chain, lo, hi, key)
+                # First hop is the straggler's raw upload (S3 in the paper's
+                # ordering-B naming); the rest is the healthy ring (S1).
+                s1 = _ring_chain(fl, chain, lo, hi, key,
+                                 stage=["S3"] + ["S1"] * (len(chain) - 2))
                 # owner's own output.
                 fl.add(owner, owner, 0.0, [s1], lo, hi, Op.STORE, key)
                 # S4: allgather among healthy from owner.
@@ -344,7 +364,7 @@ def _optcc_single_legacy(profile: BandwidthProfile, n: int, k: int,
                 ag_fids = _store_chain(fl, ag, lo, hi, key, first_deps=[s1])
                 # S2': the last allgather receiver returns the global sum.
                 fl.add(ag[-1], s_rank, hi - lo, [ag_fids[-1]], lo, hi,
-                       Op.STORE, key)
+                       Op.STORE, key, stage="S2")
 
         if fill:
             # Appendix C star all-reduce in the straggler-link bubbles:
@@ -357,7 +377,8 @@ def _optcc_single_legacy(profile: BandwidthProfile, n: int, k: int,
                 for j, h in enumerate(healthy):
                     ups.append(fl.add(
                         h, s_rank, bhi - blo, [], blo, bhi, Op.ACCUM, skey,
-                        pri=m * body + j * slot_w + ell * s_ideal))
+                        pri=m * body + j * slot_w + ell * s_ideal,
+                        stage="STAR"))
                 fl.add(s_rank, s_rank, 0.0, ups, blo, bhi, Op.STORE, skey)
             if prev_star_up:
                 pm = m - 1
@@ -365,7 +386,8 @@ def _optcc_single_legacy(profile: BandwidthProfile, n: int, k: int,
                 for j, h in enumerate(healthy):
                     fl.add(s_rank, h, phi_ - plo, prev_star_up,
                            plo, phi_, Op.STORE, ("star", pm),
-                           pri=m * body + j * slot_w + 2 * ell * s_ideal)
+                           pri=m * body + j * slot_w + 2 * ell * s_ideal,
+                           stage="STAR")
             prev_star_up = ups
 
     if fill and prev_star_up:
@@ -374,11 +396,12 @@ def _optcc_single_legacy(profile: BandwidthProfile, n: int, k: int,
         for j, h in enumerate(healthy):
             fl.add(s_rank, h, phi_ - plo, prev_star_up,
                    plo, phi_, Op.STORE, ("star", pm),
-                   pri=(k) * body + j * slot_w + 2 * ell * s_ideal)
+                   pri=(k) * body + j * slot_w + 2 * ell * s_ideal,
+                   stage="STAR")
 
     return Schedule(profile=profile, n=n, nic_flows=fl.nic,
                     meta={"algo": "optcc-single", "k": k, "ell": ell,
-                          "fill": fill})
+                          "fill": fill, "stage_ids": fl.stage_ids()})
 
 
 # ----------------------------------------------------------------------------
@@ -423,7 +446,8 @@ def optcc_multi_schedule(profile: BandwidthProfile, n: int, k: int) -> Schedule:
             ups = []
             for i, srank in enumerate(stragglers):
                 tgt = chain[i % ph]
-                up = fl.add(srank, tgt, hi - lo, [], lo, hi, Op.ACCUM, key)
+                up = fl.add(srank, tgt, hi - lo, [], lo, hi, Op.ACCUM, key,
+                            stage="S3")
                 per_node_deps.setdefault(tgt, []).append(up)
                 ups.append(up)
             last = _ring_chain(fl, chain, lo, hi, key,
@@ -443,10 +467,11 @@ def optcc_multi_schedule(profile: BandwidthProfile, n: int, k: int) -> Schedule:
                 node_pos = 1 + (i % (ph - 1))
                 sender = ag[node_pos]
                 fl.add(sender, srank, hi - lo, [ag_fids[node_pos - 1]],
-                       lo, hi, Op.STORE, key)
+                       lo, hi, Op.STORE, key, stage="S2")
 
     return Schedule(profile=profile, n=n, nic_flows=fl.nic,
-                    meta={"algo": "optcc-multi", "k": k, "m": m})
+                    meta={"algo": "optcc-multi", "k": k, "m": m,
+                          "stage_ids": fl.stage_ids()})
 
 
 # ----------------------------------------------------------------------------
@@ -509,7 +534,8 @@ def optcc_multi_gpu_schedule(profile: BandwidthProfile, n: int, k: int) -> Sched
                     ch = locals_of(srv, cyc)
                     if g > 1:
                         n1_last[srv] = _ring_chain(
-                            fl, ch, lo, hi, key, first_deps=(), nvlink=True)
+                            fl, ch, lo, hi, key, first_deps=(), nvlink=True,
+                            stage="N3" if srv == sserver else "N1")
                 per_node_deps = {lead[srv]: [n1_last[srv]]
                                  for srv in n1_last}
 
@@ -522,19 +548,19 @@ def optcc_multi_gpu_schedule(profile: BandwidthProfile, n: int, k: int) -> Sched
                                      per_node_deps=per_node_deps)
                     up_deps = [s1] + per_node_deps.get(chain[-1], [])
                     s2 = fl.add(chain[-1], s_lead, hi - lo, up_deps,
-                                lo, hi, Op.ACCUM, key)
+                                lo, hi, Op.ACCUM, key, stage="S2")
                     # straggler lead now needs its *local* collect too before
                     # the download carries the true global sum.
                     down_deps = [s2] + per_node_deps.get(s_lead, [])
                     s3 = fl.add(s_lead, chain[-1], hi - lo, down_deps,
-                                lo, hi, Op.STORE, key)
+                                lo, hi, Op.STORE, key, stage="S3")
                     fl.add(s_lead, s_lead, 0.0, down_deps, lo, hi,
                            Op.STORE, key)
                     # N2 distribute on the straggler server.
                     if g > 1:
                         _store_chain(fl, locals_of(sserver, cyc)[::-1],
                                      lo, hi, key, first_deps=down_deps,
-                                     nvlink=True)
+                                     nvlink=True, stage="N2")
                     ag_srv = [healthy_srv[(oidx + t) % qh] for t in range(qh)]
                     assert ag_srv[0] == owner_srv
                     ag = [lead[srv] for srv in ag_srv]
@@ -544,12 +570,12 @@ def optcc_multi_gpu_schedule(profile: BandwidthProfile, n: int, k: int) -> Sched
                     if g > 1:
                         _store_chain(fl, locals_of(owner_srv, cyc)[::-1],
                                      lo, hi, key, first_deps=[s3],
-                                     nvlink=True)
+                                     nvlink=True, stage="N4")
                         for t in range(1, qh):
                             _store_chain(fl, locals_of(ag_srv[t], cyc)[::-1],
                                          lo, hi, key,
                                          first_deps=[ag_fids[t - 1]],
-                                         nvlink=True)
+                                         nvlink=True, stage="N4")
                 else:
                     entry_idx = (j + seg) % qh
                     srv_chain = [healthy_srv[(entry_idx + t) % qh]
@@ -561,7 +587,8 @@ def optcc_multi_gpu_schedule(profile: BandwidthProfile, n: int, k: int) -> Sched
                     pnd = dict(per_node_deps)
                     pnd.setdefault(s_lead, [])
                     s1 = _ring_chain(fl, chain, lo, hi, key,
-                                     per_node_deps=pnd)
+                                     per_node_deps=pnd,
+                                     stage=["S3"] + ["S1"] * (len(chain) - 2))
                     own_deps = [s1] + per_node_deps.get(chain[-1], [])
                     fl.add(chain[-1], chain[-1], 0.0, own_deps, lo, hi,
                            Op.STORE, key)
@@ -572,26 +599,26 @@ def optcc_multi_gpu_schedule(profile: BandwidthProfile, n: int, k: int) -> Sched
                     ag_fids = _store_chain(fl, ag, lo, hi, key,
                                            first_deps=own_deps)
                     s2p = fl.add(ag[-1], s_lead, hi - lo, [ag_fids[-1]],
-                                 lo, hi, Op.STORE, key)
+                                 lo, hi, Op.STORE, key, stage="S2")
                     if g > 1:
                         # N4 at healthy servers.
                         _store_chain(fl, locals_of(owner_srv, cyc)[::-1],
                                      lo, hi, key, first_deps=own_deps,
-                                     nvlink=True)
+                                     nvlink=True, stage="N4")
                         for t in range(1, qh):
                             _store_chain(fl, locals_of(ag_srv[t], cyc)[::-1],
                                          lo, hi, key,
                                          first_deps=[ag_fids[t - 1]],
-                                         nvlink=True)
+                                         nvlink=True, stage="N4")
                         # N2 on the straggler server after the final return.
                         _store_chain(fl, locals_of(sserver, cyc)[::-1],
                                      lo, hi, key, first_deps=[s2p],
-                                     nvlink=True)
+                                     nvlink=True, stage="N2")
 
     return Schedule(profile=profile, n=n, nic_flows=fl.nic,
                     nvlink_flows=fl.nv,
                     meta={"algo": "optcc-multigpu", "k": k, "g": g,
-                          "ell": ell})
+                          "ell": ell, "stage_ids": fl.stage_ids()})
 
 
 # ----------------------------------------------------------------------------

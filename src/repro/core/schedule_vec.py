@@ -30,7 +30,7 @@ from __future__ import annotations
 import numpy as np
 
 from repro.core.flowvec import FlowArrays
-from repro.core.model import BandwidthProfile, Schedule
+from repro.core.model import STAGE_ID, BandwidthProfile, Schedule
 from repro.core.ring import ring_allreduce_schedule, split_points
 from repro.core.schedule import (optcc_multi_gpu_schedule,
                                  optcc_multi_schedule, optcc_single_schedule)
@@ -106,8 +106,13 @@ def ring_arrays(profile: BandwidthProfile, n: int) -> Schedule:
                     release=np.zeros(N), pri=np.full(N, np.nan),
                     nv=np.zeros(N, bool), dep_indptr=indptr,
                     dep_indices=indices)
+    stage_ids = np.empty(N, np.int16)
+    stage_ids[: (p - 1) * p] = STAGE_ID["RS"]
+    stage_ids[(p - 1) * p: p * p] = STAGE_ID["SELF"]
+    stage_ids[p * p:] = STAGE_ID["AG"]
     return Schedule(profile=profile, n=n, nic_flows=[], arrays=fa,
-                    meta={"algo": "ring", "p": p, "vec_exact": True})
+                    meta={"algo": "ring", "p": p, "vec_exact": True,
+                          "stage_ids": stage_ids})
 
 
 def optcc_single_arrays(profile: BandwidthProfile, n: int, k: int,
@@ -254,8 +259,15 @@ def optcc_single_arrays(profile: BandwidthProfile, n: int, k: int,
     fa = FlowArrays(src=src, dst=dst, size=size, release=release, pri=pri,
                     nv=np.zeros(N, bool), dep_indptr=indptr,
                     dep_indices=indices)
+    stage_ids = np.empty(N, np.int16)
+    stage_ids[f1.ravel()] = STAGE_ID["S1"]
+    stage_ids[f2.ravel()] = STAGE_ID["S2"]
+    stage_ids[fstar[sm]] = STAGE_ID["SELF"]
+    stage_ids[f3.ravel()] = STAGE_ID["S3"]
+    stage_ids[fss.ravel()] = STAGE_ID["SELF"]
+    stage_ids[f4.ravel()] = STAGE_ID["S4"]
     meta = {"algo": "optcc-single", "k": k, "ell": ell,
-            "fill": fill, "slotted": True}
+            "fill": fill, "slotted": True, "stage_ids": stage_ids}
     if ell <= 2:          # see _optcc_single_slotted for why l > 2 is greedy
         meta["port_inorder"] = True
         meta["vec_exact"] = True
@@ -346,8 +358,17 @@ def optcc_multi_arrays(profile: BandwidthProfile, n: int, k: int) -> Schedule:
                     release=np.zeros(N), pri=np.full(N, np.nan),
                     nv=np.zeros(N, bool), dep_indptr=indptr,
                     dep_indices=indices)
+    # Stage tags follow the template layout (ordering-B flavour: uploads=S3,
+    # reduce chain=S1, allgather=S4, downloads=S2), tiled over all blocks.
+    tmpl_stage = np.empty(L, np.int16)
+    tmpl_stage[:m] = STAGE_ID["S3"]
+    tmpl_stage[m:m + ph - 1] = STAGE_ID["S1"]
+    tmpl_stage[m + ph - 1] = STAGE_ID["SELF"]
+    tmpl_stage[m + ph:m + 2 * ph - 1] = STAGE_ID["S4"]
+    tmpl_stage[m + 2 * ph - 1:] = STAGE_ID["S2"]
     return Schedule(profile=profile, n=n, nic_flows=[], arrays=fa,
-                    meta={"algo": "optcc-multi", "k": k, "m": m})
+                    meta={"algo": "optcc-multi", "k": k, "m": m,
+                          "stage_ids": np.tile(tmpl_stage, nblk)})
 
 
 def optcc_multi_gpu_arrays(profile: BandwidthProfile, n: int,
@@ -405,13 +426,16 @@ def optcc_multi_gpu_arrays(profile: BandwidthProfile, n: int,
         def __init__(self):
             self.rows: list[tuple] = []   # (nv, ssel, srot, sli,
             self.deps: list[list] = []    #  dsel, drot, dli, zero)
+            self.stages: list[int] = []   # stage tag per row
 
-        def add(self, nv, ssel, srot, sli, dsel, drot, dli, zero, deps):
+        def add(self, nv, ssel, srot, sli, dsel, drot, dli, zero, deps,
+                stage="SELF"):
             self.rows.append((nv, ssel, srot, sli, dsel, drot, dli, zero))
             self.deps.append(list(deps))
+            self.stages.append(STAGE_ID[stage])
             return len(self.rows) - 1
 
-        def nv_chain(self, sel, rot, reverse, first_deps):
+        def nv_chain(self, sel, rot, reverse, first_deps, stage):
             """g-1 NVLink hops: collect order, or distribute (reversed)."""
             last = None
             for t in range(g - 1):
@@ -419,7 +443,7 @@ def optcc_multi_gpu_arrays(profile: BandwidthProfile, n: int,
                     else (g - 1 - t, g - 2 - t)
                 deps = list(first_deps) if last is None else [(0, last)]
                 last = self.add(True, sel, rot, sli, sel, rot, dli,
-                                False, deps)
+                                False, deps, stage=stage)
             return last
 
     coll_last = lambda srv: srv * (g - 1) + g - 2   # rel fid of N1/N3 end
@@ -428,47 +452,51 @@ def optcc_multi_gpu_arrays(profile: BandwidthProfile, n: int,
     def build(ordering_a: bool) -> _Tmpl:
         T = _Tmpl()
         for srv in range(q):                        # N1/N3 collects
-            T.nv_chain(srv, 0, False, ())
+            T.nv_chain(srv, 0, False, (),
+                       stage="N3" if srv == sserver else "N1")
         if ordering_a:
             last = None
             for t in range(qh - 1):                 # S1 over healthy leads
                 deps = ([] if last is None else [(0, last)]) + [(1, 1 + t)]
                 last = T.add(False, -1, 1 + t, LEAD, -1, 2 + t, LEAD,
-                             False, deps)
+                             False, deps, stage="S1")
             s2 = T.add(False, -1, qh, LEAD, -2, 0, LEAD, False,
-                       [(0, last), (1, qh)])        # owner -> straggler
+                       [(0, last), (1, qh)], stage="S2")  # owner->straggler
             down = [(0, s2), s_coll]
-            s3 = T.add(False, -2, 0, LEAD, -1, qh, LEAD, False, down)
+            s3 = T.add(False, -2, 0, LEAD, -1, qh, LEAD, False, down,
+                       stage="S3")
             T.add(False, -2, 0, LEAD, -2, 0, LEAD, True, down)
-            T.nv_chain(-2, 0, True, down)           # N2 on straggler srv
+            T.nv_chain(-2, 0, True, down, stage="N2")   # on straggler srv
             ag = []
             for t in range(qh - 1):                 # S4 over healthy leads
                 deps = [(0, s3)] if t == 0 else [(0, ag[-1])]
                 ag.append(T.add(False, -1, t, LEAD, -1, t + 1, LEAD,
-                                False, deps))
-            T.nv_chain(-1, 0, True, [(0, s3)])      # N4 at the owner
+                                False, deps, stage="S4"))
+            T.nv_chain(-1, 0, True, [(0, s3)], stage="N4")  # at the owner
             for t in range(1, qh):
-                T.nv_chain(-1, t, True, [(0, ag[t - 1])])
+                T.nv_chain(-1, t, True, [(0, ag[t - 1])], stage="N4")
         else:
             # Ordering B: straggler uploads raw first; chain is
             # [s_lead] + healthy leads rot 0..qh-1.
-            last = T.add(False, -2, 0, LEAD, -1, 0, LEAD, False, [s_coll])
+            last = T.add(False, -2, 0, LEAD, -1, 0, LEAD, False, [s_coll],
+                         stage="S3")
             for t in range(1, qh):
                 last = T.add(False, -1, t - 1, LEAD, -1, t, LEAD, False,
-                             [(0, last), (1, t - 1)])
+                             [(0, last), (1, t - 1)], stage="S1")
             own = [(0, last), (1, qh - 1)]
             T.add(False, -1, qh - 1, LEAD, -1, qh - 1, LEAD, True, own)
             ag = []
             for t in range(qh - 1):                 # allgather from owner
                 deps = own if t == 0 else [(0, ag[-1])]
                 ag.append(T.add(False, -1, qh - 1 + t, LEAD,
-                                -1, qh + t, LEAD, False, deps))
+                                -1, qh + t, LEAD, False, deps, stage="S4"))
             s2p = T.add(False, -1, 2 * qh - 2, LEAD, -2, 0, LEAD, False,
-                        [(0, ag[-1])])              # final return
-            T.nv_chain(-1, qh - 1, True, own)       # N4 at the owner
+                        [(0, ag[-1])], stage="S2")  # final return
+            T.nv_chain(-1, qh - 1, True, own, stage="N4")  # at the owner
             for t in range(1, qh):
-                T.nv_chain(-1, qh - 1 + t, True, [(0, ag[t - 1])])
-            T.nv_chain(-2, 0, True, [(0, s2p)])     # N2 on straggler srv
+                T.nv_chain(-1, qh - 1 + t, True, [(0, ag[t - 1])],
+                           stage="N4")
+            T.nv_chain(-2, 0, True, [(0, s2p)], stage="N2")
         return T
 
     tmpl = {True: build(True), False: build(False)}
@@ -492,6 +520,7 @@ def optcc_multi_gpu_arrays(profile: BandwidthProfile, n: int,
     size = np.empty(N, np.float64)
     nv = np.empty(N, bool)
     counts = np.empty(N, np.int64)
+    stage_ids = np.empty(N, np.int16)
 
     per_ord = {}
     for a in (True, False):
@@ -522,6 +551,7 @@ def optcc_multi_gpu_arrays(profile: BandwidthProfile, n: int,
         size[fids] = np.where(rows[:, 7] == 1, 0.0, sz_b[:, None])
         nv[fids] = (rows[:, 0] == 1)
         counts[fids] = dcounts
+        stage_ids[fids] = np.array(T.stages, np.int16)[None, :]
         per_ord[a] = (base_b, oidx_b, dcounts, dflat, fids)
 
     indptr = np.zeros(N + 1, np.int64)
@@ -545,7 +575,7 @@ def optcc_multi_gpu_arrays(profile: BandwidthProfile, n: int,
                     nv=nv, dep_indptr=indptr, dep_indices=indices)
     return Schedule(profile=profile, n=n, nic_flows=[], arrays=fa,
                     meta={"algo": "optcc-multigpu", "k": k, "g": g,
-                          "ell": ell})
+                          "ell": ell, "stage_ids": stage_ids})
 
 
 def optcc_schedule_arrays(profile: BandwidthProfile, n: int, k: int = 16,

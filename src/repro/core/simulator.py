@@ -53,18 +53,24 @@ class SimResult:
     100k-entry dicts per scenario would dominate the vectorized fast path.
     """
 
-    __slots__ = ("makespan", "_start", "_finish", "_port_busy", "_lazy")
+    __slots__ = ("makespan", "_start", "_finish", "_port_busy", "_lazy",
+                 "telemetry")
 
     def __init__(self, makespan: float,
                  start: Optional[dict] = None,
                  finish: Optional[dict] = None,
                  port_busy: Optional[dict] = None,
-                 lazy: Optional[Callable[[], tuple]] = None):
+                 lazy: Optional[Callable[[], tuple]] = None,
+                 telemetry=None):
         self.makespan = makespan
         self._start = start
         self._finish = finish
         self._port_busy = port_busy
         self._lazy = lazy
+        # repro.obs.FlowTelemetry when the run was asked for it, else None.
+        # Attached post-hoc by `simulate(..., telemetry=True)`; never read
+        # (or written) by any timing path.
+        self.telemetry = telemetry
 
     def _materialize(self) -> None:
         if self._lazy is not None:
@@ -96,7 +102,8 @@ class SimResult:
         # Closures don't pickle; materialize before crossing process
         # boundaries (simulate_many with workers > 0).
         return (SimResult,
-                (self.makespan, self.start, self.finish, self.port_busy))
+                (self.makespan, self.start, self.finish, self.port_busy,
+                 None, self.telemetry))
 
 
 def _flow_duration(flow: Flow, profile: BandwidthProfile, kind: str) -> float:
@@ -107,18 +114,36 @@ def _flow_duration(flow: Flow, profile: BandwidthProfile, kind: str) -> float:
     return flow.size * max(profile.slowdown[flow.src], profile.slowdown[flow.dst])
 
 
-def simulate(schedule: Schedule) -> SimResult:
+def _attach_telemetry(schedule: Schedule, result: "SimResult") -> "SimResult":
+    """Derive per-flow telemetry from an already-finished run (opt-in).
+
+    Post-hoc by design: the timings in `result` were produced by exactly
+    the same code path telemetry-off runs use, so enabling telemetry cannot
+    perturb a single bit of any simulated time.
+    """
+    from repro import obs      # deliberate late import: obs is opt-in
+    result.telemetry = obs.collect(schedule, result)
+    return result
+
+
+def simulate(schedule: Schedule, telemetry: bool = False) -> SimResult:
     """Run the schedule to completion; returns makespan and per-flow times.
 
     Dispatches to the vectorized fast path when the schedule certifies it is
     exact for its structure (``meta["vec_exact"]``), else runs the scalar
     reference event loop. Both paths agree bit-for-bit on eligible
     schedules (tests/test_vectorized_equivalence.py).
+
+    With ``telemetry=True`` the result additionally carries a
+    `repro.obs.FlowTelemetry` (``result.telemetry``) derived from the same
+    start/finish times - timings are identical either way.
     """
     if schedule.meta.get("vec_exact"):
         from repro.core import flowvec
-        return flowvec.simulate_arrays(schedule)
-    return _simulate_greedy_fast(schedule)
+        res = flowvec.simulate_arrays(schedule)
+    else:
+        res = _simulate_greedy_fast(schedule)
+    return _attach_telemetry(schedule, res) if telemetry else res
 
 
 def _simulate_greedy_fast(schedule: Schedule) -> SimResult:
@@ -303,7 +328,8 @@ def _simulate_greedy_fast(schedule: Schedule) -> SimResult:
     return SimResult(makespan, lazy=materialize)
 
 
-def simulate_reference(schedule: Schedule) -> SimResult:
+def simulate_reference(schedule: Schedule,
+                       telemetry: bool = False) -> SimResult:
     """Scalar discrete-event loop: the semantics oracle for `simulate`."""
     profile = schedule.profile
     flows: dict[int, tuple[Flow, str]] = {}
@@ -466,8 +492,9 @@ def simulate_reference(schedule: Schedule) -> SimResult:
             f"deadlock: {len(stuck)}/{len(flows)} flows never ran, e.g. "
             f"{sorted(stuck)[:5]}")
     makespan = max(finish_t.values(), default=0.0)
-    return SimResult(makespan=makespan, start=start_t, finish=finish_t,
-                     port_busy=port_busy)
+    res = SimResult(makespan=makespan, start=start_t, finish=finish_t,
+                    port_busy=port_busy)
+    return _attach_telemetry(schedule, res) if telemetry else res
 
 
 def simulate_many(schedules: Sequence[Schedule] | Iterable[Schedule],

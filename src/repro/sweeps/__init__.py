@@ -21,6 +21,7 @@ from repro.sweeps.engine import (ScenarioResult, grid_for, run_scenario,
                                  run_sweep, sanity_check)
 from repro.sweeps.scenarios import (GRIDS, PAPER_ELLS, ScenarioSpec,
                                     full_grid, smoke_grid)
+from repro.sweeps.stats import percentile, percentile_or_none, summarize
 
 __all__ = [
     "ScenarioSpec", "ScenarioResult", "GRIDS", "PAPER_ELLS",
@@ -29,4 +30,5 @@ __all__ = [
     "SCHEMA", "THRESHOLDS_SCHEMA",
     "build_artifact", "canonical_bytes", "validate_artifact",
     "check_thresholds", "write_artifact", "load_artifact",
+    "percentile", "percentile_or_none", "summarize",
 ]

@@ -8,16 +8,30 @@ summary block against a checked-in thresholds file.
 
 Schema versioning: bump SCHEMA when a field changes meaning or disappears;
 adding fields is backward-compatible (validators only check what they know).
+`load_artifact` migrates v1 artifacts in place (see _migrate_v1), so readers
+only ever see the current schema.
+
+optcc-sweep/2 (vs /1):
+  * top-level ``telemetry`` bool; when true every scenario carries a
+    ``stage_breakdown`` ({stage: element-time} summing to t_optcc) and each
+    summary group a ``stages`` block with per-stage overhead percentiles;
+  * wall-clock fields (``gen_ms``/``sim_ms``, summary ``gen_ms_p50/p99``)
+    are null on deterministic runs instead of 0.0 - unmeasured is not zero,
+    and the old 0.0 silently satisfied every latency threshold.
 """
 from __future__ import annotations
 
 import json
-import math
 from typing import Optional, Sequence
 
 from repro.sweeps.engine import ScenarioResult
+from repro.sweeps.stats import percentile, percentile_or_none
 
-SCHEMA = "optcc-sweep/1"
+__all__ = ["SCHEMA", "THRESHOLDS_SCHEMA", "percentile", "scenario_record",
+           "build_artifact", "canonical_bytes", "write_artifact",
+           "load_artifact", "validate_artifact", "check_thresholds"]
+
+SCHEMA = "optcc-sweep/2"
 THRESHOLDS_SCHEMA = "optcc-sweep-thresholds/1"
 
 _SCENARIO_REQUIRED = {
@@ -28,27 +42,13 @@ _SCENARIO_REQUIRED = {
     "t0": float, "lower_bound": float, "t_optcc": float,
     "t_predicted": float,
     "overhead_optcc": float, "overhead_lb": float, "optcc_vs_lb": float,
-    "gen_ms": float, "sim_ms": float,
 }
+# Wall-clock fields: numeric when measured, null on deterministic runs.
+_SCENARIO_LATENCY = ("gen_ms", "sim_ms")
 
 _SUMMARY_KEYS = ("count", "overhead_optcc_p50", "overhead_optcc_p99",
                  "overhead_optcc_max", "optcc_vs_lb_p50", "optcc_vs_lb_p99",
                  "optcc_vs_lb_max", "gen_ms_p50", "gen_ms_p99")
-
-
-def percentile(values: Sequence[float], q: float) -> float:
-    """Linear-interpolation percentile (numpy 'linear'), pure Python so the
-    artifact bytes don't depend on the numpy version."""
-    if not values:
-        return math.nan
-    xs = sorted(values)
-    if len(xs) == 1:
-        return xs[0]
-    pos = (q / 100.0) * (len(xs) - 1)
-    lo = int(math.floor(pos))
-    hi = min(lo + 1, len(xs) - 1)
-    frac = pos - lo
-    return xs[lo] * (1.0 - frac) + xs[hi] * frac
 
 
 def _round(x: Optional[float], digits: int = 9) -> Optional[float]:
@@ -57,9 +57,9 @@ def _round(x: Optional[float], digits: int = 9) -> Optional[float]:
     return None if x is None else round(float(x), digits)
 
 
-def scenario_record(r: ScenarioResult) -> dict:
+def scenario_record(r: ScenarioResult, deterministic: bool = False) -> dict:
     s = r.spec
-    return {
+    rec = {
         "name": s.name,
         "family": s.family,
         "algo": r.algo,
@@ -80,16 +80,38 @@ def scenario_record(r: ScenarioResult) -> dict:
         "overhead_ring": _round(r.overhead_ring),
         "overhead_lb": _round(r.overhead_lb),
         "optcc_vs_lb": _round(r.optcc_vs_lb),
-        "gen_ms": _round(r.gen_seconds * 1e3, 6),
-        "sim_ms": _round(r.sim_seconds * 1e3, 6),
+        # Unmeasured is null, not 0.0 (deterministic runs exclude wall
+        # clock so artifacts are byte-identical; see schedgen_latency_ms).
+        "gen_ms": None if deterministic else _round(r.gen_seconds * 1e3, 6),
+        "sim_ms": None if deterministic else _round(r.sim_seconds * 1e3, 6),
     }
+    if r.stage_breakdown is not None:
+        rec["stage_breakdown"] = {st: _round(v)
+                                  for st, v in sorted(r.stage_breakdown.items())}
+    return rec
 
 
-def _summarize(records: Sequence[dict]) -> dict:
+def _stage_summary(records: Sequence[dict]) -> dict:
+    """Per-stage critical-path overhead percentiles over the scenarios in
+    which the stage appears (overhead = contribution / t0). `count` says how
+    many scenarios that was - stages are not zero-filled across the grid."""
+    per_stage: dict[str, list[float]] = {}
+    for r in records:
+        t0 = r["t0"]
+        for st, v in (r.get("stage_breakdown") or {}).items():
+            per_stage.setdefault(st, []).append(v / t0)
+    return {st: {"count": len(vs),
+                 "overhead_p50": _round(percentile(vs, 50)),
+                 "overhead_p99": _round(percentile(vs, 99)),
+                 "overhead_max": _round(max(vs))}
+            for st, vs in sorted(per_stage.items())}
+
+
+def _summarize(records: Sequence[dict], telemetry: bool = False) -> dict:
     ov = [r["overhead_optcc"] for r in records]
     vs = [r["optcc_vs_lb"] for r in records]
     gen = [r["gen_ms"] for r in records]
-    return {
+    out = {
         "count": len(records),
         "overhead_optcc_p50": _round(percentile(ov, 50)),
         "overhead_optcc_p99": _round(percentile(ov, 99)),
@@ -97,30 +119,37 @@ def _summarize(records: Sequence[dict]) -> dict:
         "optcc_vs_lb_p50": _round(percentile(vs, 50)),
         "optcc_vs_lb_p99": _round(percentile(vs, 99)),
         "optcc_vs_lb_max": _round(max(vs)),
-        "gen_ms_p50": _round(percentile(gen, 50), 6),
-        "gen_ms_p99": _round(percentile(gen, 99), 6),
+        "gen_ms_p50": _round(percentile_or_none(gen, 50), 6),
+        "gen_ms_p99": _round(percentile_or_none(gen, 99), 6),
     }
+    if telemetry:
+        out["stages"] = _stage_summary(records)
+    return out
 
 
 def build_artifact(results: Sequence[ScenarioResult], profile: str,
                    seed: int, deterministic: bool,
-                   schedgen_latency_ms: Optional[float] = None) -> dict:
-    records = [scenario_record(r) for r in results]
+                   schedgen_latency_ms: Optional[float] = None,
+                   telemetry: bool = False) -> dict:
+    records = [scenario_record(r, deterministic=deterministic)
+               for r in results]
     families = sorted({r["family"] for r in records})
     return {
         "schema": SCHEMA,
         "profile": profile,
         "seed": seed,
         "deterministic": deterministic,
+        "telemetry": telemetry,
         # Best-of-N descriptor-path re-planning latency at p=1024 (Section
         # 4.3's < 1 ms claim); None on deterministic runs, where wall-clock
         # measurements are excluded so artifacts stay byte-identical.
         "schedgen_latency_ms": _round(schedgen_latency_ms, 6),
         "scenario_count": len(records),
         "summary": {
-            "overall": _summarize(records),
+            "overall": _summarize(records, telemetry),
             "by_family": {
-                fam: _summarize([r for r in records if r["family"] == fam])
+                fam: _summarize([r for r in records if r["family"] == fam],
+                                telemetry)
                 for fam in families
             },
         },
@@ -142,12 +171,33 @@ def _reject_constant(name: str) -> float:
     raise ValueError(f"non-finite JSON constant {name!r} in artifact")
 
 
+def _migrate_v1(obj: dict) -> dict:
+    """In-place upgrade of an optcc-sweep/1 artifact to /2 semantics:
+    no telemetry, and deterministic runs' 0.0 wall-clock placeholders become
+    null (v1 wrote zeros for unmeasured latencies)."""
+    obj["schema"] = SCHEMA
+    obj["telemetry"] = False
+    if obj.get("deterministic"):
+        for rec in obj.get("scenarios", ()):
+            for key in _SCENARIO_LATENCY:
+                rec[key] = None
+        summary = obj.get("summary", {})
+        groups = [summary.get("overall", {})]
+        groups.extend(summary.get("by_family", {}).values())
+        for stats in groups:
+            stats["gen_ms_p50"] = stats["gen_ms_p99"] = None
+    return obj
+
+
 def load_artifact(path: str) -> dict:
     # NaN/Infinity would sail through every comparison in validation and
     # threshold gating (NaN > limit is False), turning the CI gate green on
     # corrupted data - reject them at parse time.
     with open(path, "rb") as f:
-        return json.load(f, parse_constant=_reject_constant)
+        obj = json.load(f, parse_constant=_reject_constant)
+    if obj.get("schema") == "optcc-sweep/1":
+        obj = _migrate_v1(obj)
+    return obj
 
 
 # ----------------------------------------------------------------------------
@@ -166,6 +216,7 @@ def validate_artifact(artifact: dict) -> list[str]:
     if errs:
         return errs
     scenarios = artifact["scenarios"]
+    telemetry = bool(artifact.get("telemetry"))
     if artifact["scenario_count"] != len(scenarios):
         errs.append(f"scenario_count {artifact['scenario_count']} != "
                     f"len(scenarios) {len(scenarios)}")
@@ -180,6 +231,12 @@ def validate_artifact(artifact: dict) -> list[str]:
                     rec_errs.append(f"scenario[{i}].{key} not numeric")
             elif not isinstance(rec[key], typ):
                 rec_errs.append(f"scenario[{i}].{key} not {typ.__name__}")
+        for key in _SCENARIO_LATENCY:
+            if key not in rec:
+                rec_errs.append(f"scenario[{i}] missing {key!r}")
+            elif rec[key] is not None and not isinstance(rec[key],
+                                                        (int, float)):
+                rec_errs.append(f"scenario[{i}].{key} not numeric or null")
         if rec_errs:
             errs.extend(rec_errs)
             continue
@@ -190,12 +247,32 @@ def validate_artifact(artifact: dict) -> list[str]:
             errs.append(f"{rec['name']}: t_optcc beats the lower bound")
         if rec["overhead_lb"] > rec["overhead_optcc"] * (1 + 1e-9):
             errs.append(f"{rec['name']}: overhead_lb > overhead_optcc")
+        sb = rec.get("stage_breakdown")
+        if telemetry:
+            # The tentpole invariant, enforced on every telemetry artifact:
+            # critical-path stage contributions account for the *entire*
+            # simulated time (1e-6 relative absorbs the 9-digit rounding).
+            if not isinstance(sb, dict) or not sb:
+                errs.append(f"{rec['name']}: telemetry artifact lacks "
+                            f"stage_breakdown")
+            else:
+                total = sum(sb.values())
+                if abs(total - rec["t_optcc"]) > 1e-6 * max(
+                        rec["t_optcc"], 1.0):
+                    errs.append(
+                        f"{rec['name']}: stage_breakdown sums to "
+                        f"{total:.9g}, t_optcc is {rec['t_optcc']:.9g}")
+        elif sb is not None:
+            errs.append(f"{rec['name']}: stage_breakdown present but "
+                        f"telemetry is off")
     summary = artifact["summary"]
     for group, stats in [("overall", summary.get("overall", {}))] + \
             sorted(summary.get("by_family", {}).items()):
         for key in _SUMMARY_KEYS:
             if key not in stats:
                 errs.append(f"summary[{group}] missing {key!r}")
+        if telemetry and "stages" not in stats:
+            errs.append(f"summary[{group}] missing 'stages' block")
     return errs
 
 
@@ -221,6 +298,29 @@ def check_thresholds(artifact: dict, thresholds: dict) -> list[str]:
         got = overall[key]
         if got > limit:
             fails.append(f"{label}: {got:.6g} > limit {limit:.6g} ({key})")
+    # Per-stage gates: {stage: p99 overhead limit}. A thresholds file that
+    # names stages demands a telemetry artifact - a sweep run without
+    # --telemetry must fail loudly, not skip the gate.
+    stage_limits = thresholds.get("stage_overhead_p99_max") or {}
+    if stage_limits:
+        stages = overall.get("stages")
+        if stages is None:
+            fails.append("thresholds gate per-stage overheads but the "
+                         "artifact has no stage telemetry (run the sweep "
+                         "with --telemetry)")
+        else:
+            for stage, limit in sorted(stage_limits.items()):
+                st = stages.get(stage)
+                if st is None:
+                    fails.append(f"stage {stage!r} gated but absent from "
+                                 f"the sweep's critical paths")
+                    continue
+                got = st["overhead_p99"]
+                if got > limit:
+                    fails.append(
+                        f"critical-path p99 overhead of stage {stage}: "
+                        f"{got:.6g} > limit {limit:.6g} "
+                        f"(stage_overhead_p99_max.{stage})")
     min_scen = thresholds.get("min_scenarios")
     if min_scen is not None and artifact["scenario_count"] < min_scen:
         fails.append(f"scenario_count {artifact['scenario_count']} < "

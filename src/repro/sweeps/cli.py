@@ -4,6 +4,9 @@ Usage:
   python -m repro.sweeps --smoke                      # CI-sized, seconds
   python -m repro.sweeps --full --workers 8           # nightly-sized
   python -m repro.sweeps --smoke --deterministic      # byte-stable artifact
+  python -m repro.sweeps --smoke --telemetry          # + per-stage breakdowns
+  python -m repro.sweeps --trace smoke_p8_single_e1_75 --trace-out trace.json
+  python -m repro.sweeps --trace worst --trace-from BENCH_sweep.json
   python -m repro.sweeps check BENCH_sweep.json --thresholds ci/sweep_thresholds.json
 """
 from __future__ import annotations
@@ -40,6 +43,20 @@ def _add_run_args(ap: argparse.ArgumentParser) -> None:
     ap.add_argument("--thresholds", default=None,
                     help="optionally gate the fresh artifact against a "
                          "thresholds JSON after the run")
+    ap.add_argument("--telemetry", action="store_true",
+                    help="attribute each scenario's simulated time to OptCC "
+                         "stages along the critical path (adds "
+                         "stage_breakdown + per-stage summaries to the "
+                         "artifact; timings are bit-identical either way)")
+    ap.add_argument("--trace", metavar="SCENARIO", default=None,
+                    help="instead of sweeping, simulate one named scenario "
+                         "with telemetry and write a Chrome trace "
+                         "(chrome://tracing / Perfetto). 'worst' picks the "
+                         "highest-overhead scenario from --trace-from")
+    ap.add_argument("--trace-out", default="trace.json",
+                    help="Chrome-trace output path (with --trace)")
+    ap.add_argument("--trace-from", metavar="ARTIFACT", default=None,
+                    help="artifact to resolve --trace worst against")
 
 
 def build_parser() -> argparse.ArgumentParser:
@@ -96,13 +113,60 @@ def measure_schedgen_latency(p: int = 1024, k: int = 4,
     return best * 1e3
 
 
+def worst_scenario_name(artifact_obj: dict) -> str:
+    """Name of the scenario with the highest OptCC overhead - the one worth
+    staring at in a trace viewer."""
+    recs = artifact_obj["scenarios"]
+    if not recs:
+        raise ValueError("artifact has no scenarios")
+    return max(recs, key=lambda r: (r["overhead_optcc"], r["name"]))["name"]
+
+
+def cmd_trace(args: argparse.Namespace) -> int:
+    """Simulate one scenario with telemetry and write a Chrome trace."""
+    from repro import obs
+    from repro.core.planner import make_plan
+    from repro.core.simulator import simulate
+    name = args.trace
+    if name == "worst":
+        if args.trace_from is None:
+            print("error: --trace worst needs --trace-from ARTIFACT",
+                  file=sys.stderr)
+            return 2
+        name = worst_scenario_name(art.load_artifact(args.trace_from))
+        print(f"worst-overhead scenario: {name}", file=sys.stderr)
+    specs = [s for s in grid_for(args.profile, seed=args.seed)
+             if s.name == name]
+    if not specs:
+        print(f"error: scenario {name!r} not in the "
+              f"{args.profile!r} grid", file=sys.stderr)
+        return 2
+    spec = specs[0]
+    plan = make_plan(spec.profile(), spec.n, k=spec.k,
+                     fill_bubbles=spec.fill_bubbles, materialize="arrays")
+    res = simulate(plan.schedule, telemetry=True)
+    obs.write_chrome_trace(res.telemetry, args.trace_out, name=spec.name)
+    breakdown = obs.stage_breakdown(res.telemetry)
+    print(f"wrote {args.trace_out}: {spec.name} algo={plan.algo} "
+          f"T={res.makespan:.6g} ({res.telemetry.nflows} flows)")
+    for stage, v in sorted(breakdown.items(), key=lambda kv: -kv[1]):
+        print(f"  {stage:10s} {v:14.3f}  ({v / res.makespan:6.1%})")
+    return 0
+
+
+def _fmt_ms(x) -> str:
+    return "-" if x is None else f"{x:.3f}ms"
+
+
 def cmd_run(args: argparse.Namespace) -> int:
     t_start = time.perf_counter()
     specs = grid_for(args.profile, seed=args.seed)
     print(f"sweep profile={args.profile} seed={args.seed}: "
-          f"{len(specs)} scenarios, workers={args.workers}", file=sys.stderr)
+          f"{len(specs)} scenarios, workers={args.workers}"
+          f"{' +telemetry' if args.telemetry else ''}", file=sys.stderr)
     results = run_sweep(specs, workers=args.workers,
-                        measure_latency=not args.deterministic)
+                        measure_latency=not args.deterministic,
+                        telemetry=args.telemetry)
     bad = sanity_check(results)
     for msg in bad:
         print(f"INVARIANT FAIL: {msg}", file=sys.stderr)
@@ -110,18 +174,24 @@ def cmd_run(args: argparse.Namespace) -> int:
     artifact_obj = art.build_artifact(results, profile=args.profile,
                                       seed=args.seed,
                                       deterministic=args.deterministic,
-                                      schedgen_latency_ms=schedgen_ms)
+                                      schedgen_latency_ms=schedgen_ms,
+                                      telemetry=args.telemetry)
     art.write_artifact(artifact_obj, args.out)
     wall = time.perf_counter() - t_start
     overall = artifact_obj["summary"]["overall"]
-    lat = ("-" if schedgen_ms is None else f"{schedgen_ms:.3f}ms")
     print(f"wrote {args.out}: {len(results)} scenarios in {wall:.1f}s | "
           f"overhead p50={overall['overhead_optcc_p50']:.4f} "
           f"p99={overall['overhead_optcc_p99']:.4f} "
           f"max={overall['overhead_optcc_max']:.4f} | "
           f"vs-LB p99={overall['optcc_vs_lb_p99']:.4f} | "
-          f"gen p99={overall['gen_ms_p99']:.3f}ms | "
-          f"schedgen(p=1024)={lat}")
+          f"gen p99={_fmt_ms(overall['gen_ms_p99'])} | "
+          f"schedgen(p=1024)={_fmt_ms(schedgen_ms)}")
+    if args.telemetry:
+        for stage, st in sorted(overall["stages"].items()):
+            print(f"  stage {stage:10s} n={st['count']:4d} "
+                  f"overhead p50={st['overhead_p50']:.4f} "
+                  f"p99={st['overhead_p99']:.4f} "
+                  f"max={st['overhead_max']:.4f}")
     if bad:
         return 1
     return _gate(artifact_obj, args.thresholds)
@@ -136,6 +206,8 @@ def main(argv: list[str] | None = None) -> int:
     try:
         if args.cmd == "check":
             return cmd_check(args)
+        if args.trace is not None:
+            return cmd_trace(args)
         return cmd_run(args)
     except (ValueError, OSError, json.JSONDecodeError) as e:
         print(f"error: {e}", file=sys.stderr)

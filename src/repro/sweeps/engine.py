@@ -15,6 +15,7 @@ same results - the model is deterministic).
 from __future__ import annotations
 
 import dataclasses
+import functools
 import time
 from typing import Optional, Sequence
 
@@ -39,6 +40,9 @@ class ScenarioResult:
     gen_seconds: float             # schedule-generation wall time
     sim_seconds: float             # OptCC simulation wall time (not a claim)
     ring_sim_seconds: float = 0.0  # ring-baseline simulation wall time
+    # Critical-path stage attribution ({stage: element-time}, sums to
+    # t_optcc); only populated when the sweep runs with telemetry on.
+    stage_breakdown: Optional[dict] = None
 
     @property
     def overhead_optcc(self) -> float:
@@ -62,14 +66,26 @@ class ScenarioResult:
 
 
 def run_scenario(spec: ScenarioSpec,
-                 measure_latency: bool = True) -> ScenarioResult:
-    """Plan + simulate + score one scenario."""
+                 measure_latency: bool = True,
+                 telemetry: bool = False) -> ScenarioResult:
+    """Plan + simulate + score one scenario.
+
+    telemetry=True additionally attributes the simulated makespan to OptCC
+    stages along the critical path (`repro.obs`). Attribution is derived
+    *after* the timed simulation from its recorded flow times, so t_optcc is
+    bit-identical with and without it.
+    """
     profile = spec.profile()
     plan = make_plan(profile, spec.n, k=spec.k,
                      fill_bubbles=spec.fill_bubbles, materialize="arrays")
     t_sim0 = time.perf_counter()
-    t_optcc = simulate(plan.schedule).makespan
+    res = simulate(plan.schedule)
+    t_optcc = res.makespan
     sim_seconds = time.perf_counter() - t_sim0
+    stage_breakdown = None
+    if telemetry:
+        from repro import obs
+        stage_breakdown = obs.stage_breakdown(obs.collect(plan.schedule, res))
     t_ring = None
     ring_sim_seconds = 0.0
     if spec.simulate_ring:
@@ -91,26 +107,24 @@ def run_scenario(spec: ScenarioSpec,
         gen_seconds=plan.gen_seconds if measure_latency else 0.0,
         sim_seconds=sim_seconds if measure_latency else 0.0,
         ring_sim_seconds=ring_sim_seconds if measure_latency else 0.0,
+        stage_breakdown=stage_breakdown,
     )
 
 
-def _run_scenario_timed(spec: ScenarioSpec) -> ScenarioResult:
-    return run_scenario(spec, measure_latency=True)
-
-
-def _run_scenario_untimed(spec: ScenarioSpec) -> ScenarioResult:
-    return run_scenario(spec, measure_latency=False)
-
-
 def run_sweep(specs: Sequence[ScenarioSpec], workers: int = 0,
-              measure_latency: bool = True) -> list[ScenarioResult]:
+              measure_latency: bool = True,
+              telemetry: bool = False) -> list[ScenarioResult]:
     """Run a scenario grid, preserving grid order.
 
     measure_latency=False zeroes all wall-clock fields, making the results -
     and the artifact built from them - a pure function of the grid
     (byte-identical across runs; the determinism CI check uses this).
+    telemetry=True populates each result's stage_breakdown (deterministic
+    too: attribution is pure arithmetic on simulated times).
     """
-    fn = _run_scenario_timed if measure_latency else _run_scenario_untimed
+    # partial of a module-level function pickles, so the process pool works.
+    fn = functools.partial(run_scenario, measure_latency=measure_latency,
+                           telemetry=telemetry)
     return map_scenarios(fn, list(specs), workers=workers)
 
 

@@ -1,0 +1,246 @@
+"""Observability layer: telemetry must not perturb timings, critical-path
+attribution must account for the entire makespan, traces must be valid and
+port-consistent, and the artifact/threshold plumbing must gate on stages."""
+import copy
+import json
+
+import numpy as np
+import pytest
+
+from repro import obs
+from repro.core.model import STAGE_ID, BandwidthProfile
+from repro.core.ring import ring_allreduce_schedule
+from repro.core.schedule import (optcc_multi_gpu_schedule,
+                                 optcc_multi_schedule, optcc_schedule,
+                                 optcc_single_schedule)
+from repro.core.schedule_vec import optcc_schedule_arrays
+from repro.core.simulator import simulate, simulate_reference
+from repro.sweeps import (build_artifact, check_thresholds, run_scenario,
+                          run_sweep, smoke_grid, validate_artifact)
+from repro.sweeps.artifact import load_artifact, write_artifact
+
+PROFILES = [
+    pytest.param(BandwidthProfile.healthy(8), id="healthy-ring"),
+    pytest.param(BandwidthProfile.single_straggler(8, 1.75, 3), id="single-fill"),
+    pytest.param(BandwidthProfile.single_straggler(8, 3.0, 3), id="single-l3"),
+    pytest.param(BandwidthProfile.multi_straggler(16, (2.0, 3.0), (1, 9)),
+                 id="multi"),
+    pytest.param(BandwidthProfile.single_straggler(16, 2.5, 1, g=4),
+                 id="multigpu"),
+]
+
+# Every 11th smoke scenario: all five families, a few seconds of CPU.
+SUB = smoke_grid(seed=0)[::11]
+
+
+# ----------------------------------------------------------------------------
+# telemetry is free: timings identical on and off
+# ----------------------------------------------------------------------------
+
+def test_telemetry_does_not_change_timings_on_grid():
+    off = run_sweep(SUB, workers=0, measure_latency=False)
+    on = run_sweep(SUB, workers=0, measure_latency=False, telemetry=True)
+    for a, b in zip(off, on):
+        assert a.t_optcc == b.t_optcc, b.spec.name       # IEEE-754 equal
+        assert a.t_ring == b.t_ring, b.spec.name
+        assert a.stage_breakdown is None
+        assert b.stage_breakdown
+
+
+@pytest.mark.parametrize("profile", PROFILES)
+def test_simulate_telemetry_flag(profile):
+    sch = optcc_schedule_arrays(profile, 65536, 4)
+    r_off = simulate(sch)
+    r_on = simulate(sch, telemetry=True)
+    assert r_off.telemetry is None
+    assert r_on.telemetry is not None
+    assert r_off.makespan == r_on.makespan
+    # identical per-flow times too, not just the max
+    assert r_off.start == r_on.start and r_off.finish == r_on.finish
+
+
+# ----------------------------------------------------------------------------
+# exact attribution
+# ----------------------------------------------------------------------------
+
+@pytest.mark.parametrize("profile", PROFILES)
+def test_stage_breakdown_sums_to_makespan(profile):
+    sch = optcc_schedule_arrays(profile, 65536, 4)
+    res = simulate(sch, telemetry=True)
+    bd = obs.stage_breakdown(res.telemetry)
+    total = sum(bd.values())
+    assert total == pytest.approx(res.makespan, rel=1e-9)
+    assert all(v > 0 for v in bd.values())
+
+
+@pytest.mark.parametrize("profile", PROFILES)
+def test_stage_breakdown_reference_path(profile):
+    """The scalar oracle's telemetry obeys the same exactness invariant."""
+    sch = optcc_schedule(profile, 65536, 4)
+    res = simulate_reference(sch, telemetry=True)
+    bd = obs.stage_breakdown(res.telemetry)
+    assert sum(bd.values()) == pytest.approx(res.makespan, rel=1e-9)
+
+
+def test_critical_path_tiles_the_makespan():
+    sch = optcc_schedule_arrays(
+        BandwidthProfile.single_straggler(8, 1.75, 3), 65536, 4)
+    res = simulate(sch, telemetry=True)
+    segments, gaps = obs.critical_path(res.telemetry)
+    # Segments and gaps, merged by time, must cover [0, makespan] seamlessly.
+    pieces = sorted(
+        [(s["start"], s["finish"]) for s in segments]
+        + [(g["t0"], g["t1"]) for g in gaps])
+    assert pieces[0][0] == 0.0
+    assert pieces[-1][1] == res.makespan
+    for (a0, a1), (b0, b1) in zip(pieces, pieces[1:]):
+        assert a1 == b0, "overlap or hole in the critical-path tiling"
+
+
+# ----------------------------------------------------------------------------
+# stage tagging
+# ----------------------------------------------------------------------------
+
+@pytest.mark.parametrize("profile", PROFILES)
+def test_vec_and_scalar_stage_ids_agree(profile):
+    scalar = optcc_schedule(profile, 65536, 4)
+    vec = optcc_schedule_arrays(profile, 65536, 4)
+    a = scalar.meta["stage_ids"]
+    b = vec.meta["stage_ids"]
+    assert len(a) == scalar.num_flows == vec.num_flows == len(b)
+    assert np.array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_stage_vocabulary_by_family():
+    ring = ring_allreduce_schedule(BandwidthProfile.healthy(8), 4096)
+    assert set(np.unique(ring.meta["stage_ids"])) == \
+        {STAGE_ID["RS"], STAGE_ID["AG"], STAGE_ID["SELF"]}
+    single = optcc_single_schedule(
+        BandwidthProfile.single_straggler(8, 1.75, 3), 65536, 4)
+    assert {STAGE_ID["S1"], STAGE_ID["S2"], STAGE_ID["S3"],
+            STAGE_ID["S4"]} <= set(np.unique(single.meta["stage_ids"]))
+    multi = optcc_multi_schedule(
+        BandwidthProfile.multi_straggler(8, (2.0, 3.0)), 65536, 4)
+    assert {STAGE_ID["S1"], STAGE_ID["S2"], STAGE_ID["S3"],
+            STAGE_ID["S4"]} <= set(np.unique(multi.meta["stage_ids"]))
+    mg = optcc_multi_gpu_schedule(
+        BandwidthProfile.single_straggler(8, 2.5, 1, g=2), 65536, 4)
+    tags = set(np.unique(mg.meta["stage_ids"]))
+    assert {STAGE_ID["N1"], STAGE_ID["N2"], STAGE_ID["N3"],
+            STAGE_ID["N4"]} <= tags
+
+
+# ----------------------------------------------------------------------------
+# chrome trace
+# ----------------------------------------------------------------------------
+
+@pytest.mark.parametrize("profile", PROFILES)
+def test_chrome_trace_roundtrip_and_port_exclusivity(profile, tmp_path):
+    sch = optcc_schedule_arrays(profile, 65536, 4)
+    res = simulate(sch, telemetry=True)
+    path = tmp_path / "trace.json"
+    obs.write_chrome_trace(res.telemetry, str(path))
+    tr = json.loads(path.read_text())          # valid JSON round-trip
+    evs = tr["traceEvents"]
+    assert any(e["ph"] == "M" for e in evs)
+    # Within every (pid, tid) lane, complete events must not overlap and
+    # must be monotone once sorted by ts - ports are exclusive resources.
+    lanes = {}
+    for e in evs:
+        if e["ph"] != "X" or e["cat"] != "flow":
+            continue
+        assert e["dur"] > 0
+        lanes.setdefault((e["pid"], e["tid"]), []).append(
+            (e["ts"], e["ts"] + e["dur"]))
+    assert lanes
+    for lane, iv in lanes.items():
+        iv.sort()
+        for (a0, a1), (b0, b1) in zip(iv, iv[1:]):
+            assert b0 >= a1, f"overlapping events in lane {lane}"
+    # One critical-path lane whose slices sum to the makespan.
+    cp = [e for e in evs if e["ph"] == "X" and e["cat"] == "critical"]
+    assert sum(e["dur"] for e in cp) == pytest.approx(res.makespan,
+                                                      rel=1e-9)
+
+
+# ----------------------------------------------------------------------------
+# artifact schema v2 + gating
+# ----------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def tel_artifact():
+    results = run_sweep(SUB, workers=0, measure_latency=False,
+                        telemetry=True)
+    return build_artifact(results, profile="smoke/11", seed=0,
+                          deterministic=True, telemetry=True)
+
+
+def test_telemetry_artifact_validates(tel_artifact):
+    assert tel_artifact["telemetry"] is True
+    assert validate_artifact(tel_artifact) == []
+    for rec in tel_artifact["scenarios"]:
+        assert rec["gen_ms"] is None and rec["sim_ms"] is None
+        assert sum(rec["stage_breakdown"].values()) == \
+            pytest.approx(rec["t_optcc"], rel=1e-6)
+    assert tel_artifact["summary"]["overall"]["stages"]
+
+
+def test_validator_catches_bad_stage_sum(tel_artifact):
+    bad = copy.deepcopy(tel_artifact)
+    first_stage = next(iter(bad["scenarios"][0]["stage_breakdown"]))
+    bad["scenarios"][0]["stage_breakdown"][first_stage] *= 2.0
+    assert any("stage_breakdown sums" in e for e in validate_artifact(bad))
+    bad = copy.deepcopy(tel_artifact)
+    del bad["scenarios"][0]["stage_breakdown"]
+    assert any("lacks stage_breakdown" in e for e in validate_artifact(bad))
+
+
+def test_stage_thresholds_gate(tel_artifact):
+    base = {"schema": "optcc-sweep-thresholds/1"}
+    loose = dict(base, stage_overhead_p99_max={"S1": 100.0})
+    assert check_thresholds(tel_artifact, loose) == []
+    tight = dict(base, stage_overhead_p99_max={"S1": 1e-6})
+    assert any("stage S1" in f for f in check_thresholds(tel_artifact, tight))
+    ghost = dict(base, stage_overhead_p99_max={"NOPE": 1.0})
+    assert any("absent" in f for f in check_thresholds(tel_artifact, ghost))
+    # a stage gate against a telemetry-less artifact must fail, not skip
+    results = run_sweep(SUB[:3], workers=0, measure_latency=False)
+    plain = build_artifact(results, profile="x", seed=0, deterministic=True)
+    assert any("no stage telemetry" in f
+               for f in check_thresholds(plain, loose))
+
+
+def test_v1_artifact_migration(tmp_path):
+    results = run_sweep(SUB[:3], workers=0, measure_latency=False)
+    art = build_artifact(results, profile="x", seed=0, deterministic=True)
+    # Regress the artifact to v1 on-disk form: schema tag, no telemetry
+    # flag, zeros instead of nulls for unmeasured wall-clock fields.
+    art["schema"] = "optcc-sweep/1"
+    del art["telemetry"]
+    for rec in art["scenarios"]:
+        rec["gen_ms"] = rec["sim_ms"] = 0.0
+    for stats in [art["summary"]["overall"],
+                  *art["summary"]["by_family"].values()]:
+        stats["gen_ms_p50"] = stats["gen_ms_p99"] = 0.0
+    path = tmp_path / "v1.json"
+    write_artifact(art, str(path))
+    migrated = load_artifact(str(path))
+    assert migrated["schema"] == "optcc-sweep/2"
+    assert migrated["telemetry"] is False
+    assert migrated["scenarios"][0]["gen_ms"] is None
+    assert migrated["summary"]["overall"]["gen_ms_p99"] is None
+    assert validate_artifact(migrated) == []
+
+
+def test_run_scenario_breakdown_matches_direct():
+    """The sweep's stage_breakdown is the same attribution `obs` computes
+    on the scenario's plan, not a reimplementation."""
+    spec = next(s for s in SUB if s.family == "single")
+    r = run_scenario(spec, measure_latency=False, telemetry=True)
+    from repro.core.planner import make_plan
+    plan = make_plan(spec.profile(), spec.n, k=spec.k,
+                     fill_bubbles=spec.fill_bubbles, materialize="arrays")
+    res = simulate(plan.schedule, telemetry=True)
+    assert r.stage_breakdown == obs.stage_breakdown(res.telemetry)
+    assert sum(r.stage_breakdown.values()) == pytest.approx(r.t_optcc,
+                                                            rel=1e-9)
