@@ -12,6 +12,13 @@ With ``--trace PATH`` the demo instead simulates the same degraded
 scenario's OptCC schedule with telemetry, writes a Chrome trace (open in
 chrome://tracing or Perfetto) and prints the critical-path stage breakdown
 - no JAX subprocess is run.
+
+With ``--timeline [TRACE.json]`` the demo replays the degraded scenario
+under a time-varying failure timeline (default: member 3 recovers at
+0.35 T0; or any `ci/traces/*.json` file) and prints the static (no-replan)
+vs mid-flight-replanned makespans next to the timeline lower bound - the
+quantified payoff of re-planning when the fault pattern changes mid-
+collective. Also JAX-free.
 """
 import argparse
 import os
@@ -91,12 +98,58 @@ def trace_scenario(path: str) -> None:
         print(f"  {stage:10s} {v:14.3f}  ({v / res.makespan:6.1%})")
 
 
+def timeline_scenario(trace_path: str | None) -> None:
+    """Replay the demo's degraded scenario under a failure timeline and
+    print no-replan vs replanned makespans next to the lower bound."""
+    from repro.core import lower_bounds as lb
+    from repro.core.model import BandwidthProfile, FaultTimeline
+    from repro.core.planner import replay
+
+    p, n = 8, 1_000_000
+    profile = BandwidthProfile.single_straggler(p, 1.75, straggler=3)
+    scale = lb.t0_fault_free(p, n, 1)
+    if trace_path is None:
+        name = "built-in recovery (member 3 heals at 0.35 T0)"
+        events = [(0.0, 3, 1.75), (0.35 * scale, 3, 1.0)]
+    else:
+        from repro.sweeps.scenarios import load_trace
+        tr = load_trace(trace_path)
+        name = tr["name"]
+        # Trace event times are in units of T0 (scale-free); ranks wrap.
+        events = [(t * scale, int(r) % p, ell) for t, r, ell in tr["events"]]
+    tl = FaultTimeline.make(events)
+    rr = replay(profile, n, tl, k=16)
+    print(f"timeline: {name} ({len(events)} events, p={p}, n={n})")
+    print(f"  fault-free optimum T0     {rr.t0:14.1f}")
+    print(f"  timeline lower bound      {rr.lower_bound:14.1f}  "
+          f"({rr.lower_bound / rr.t0:.3f}x T0)")
+    print(f"  static plan, no replan    {rr.t_noreplan:14.1f}  "
+          f"({rr.t_noreplan / rr.t0:.3f}x T0)")
+    print(f"  mid-flight replanned      {rr.t_replan:14.1f}  "
+          f"({rr.t_replan / rr.t0:.3f}x T0, {rr.replans} replans)")
+    if rr.adopted_replan:
+        print(f"  re-planning saved {rr.t_noreplan - rr.t_replan:.1f} "
+              f"({1 - rr.t_replan / rr.t_noreplan:.1%} of the no-replan "
+              f"makespan)")
+    else:
+        print("  re-planning could not beat riding the original schedule")
+
+
 def main():
     ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
     ap.add_argument("--trace", metavar="PATH", default=None,
                     help="write a Chrome trace of the degraded scenario's "
                          "simulated schedule and exit (skips the JAX run)")
+    ap.add_argument("--timeline", metavar="TRACE.json", nargs="?",
+                    const="", default=None,
+                    help="replay the degraded scenario under a failure "
+                         "timeline (default: a mid-flight recovery; or a "
+                         "ci/traces/*.json file) and print static vs "
+                         "replanned makespans (skips the JAX run)")
     args = ap.parse_args()
+    if args.timeline is not None:
+        timeline_scenario(args.timeline or None)
+        return
     if args.trace:
         trace_scenario(args.trace)
         return

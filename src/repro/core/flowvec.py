@@ -113,13 +113,56 @@ def _port_predecessors(order_pos: np.ndarray, port_id: np.ndarray,
     pred[ps[1:][same]] = ps[:-1][same]
 
 
-def simulate_arrays(schedule: Schedule, telemetry: bool = False):
+def _segmented_finish(s: np.ndarray, sizes: np.ndarray, lmat: np.ndarray,
+                      breaks: np.ndarray) -> np.ndarray:
+    """Finish times of NIC wire flows under piecewise-constant rates.
+
+    `s` are start times, `sizes` remaining-element budgets, `lmat[k, i]` the
+    effective slowdown max(l_src, l_dst) of flow i during segment k, and
+    `breaks` the segment boundaries (len(breaks) == lmat.shape[0] - 1).
+
+    Mirrors the scalar event loops' re-timing arithmetic op-for-op: a flow
+    finishing exactly at a breakpoint completes under the old rate (<= hi),
+    a flow starting exactly at a breakpoint uses the new rate (strict
+    t < hi), and partial segments carry ``rem = max(rem - (hi-t)/l, 0)``
+    elements forward - that is what keeps vec and scalar runs bit-identical
+    under timelines (tests/test_replay.py).
+    """
+    t = s.copy()
+    rem = sizes.astype(np.float64).copy()
+    fin = np.empty_like(t)
+    done = np.zeros(len(t), bool)
+    nseg = lmat.shape[0]
+    for k in range(nseg):
+        hi = float(breaks[k]) if k < nseg - 1 else np.inf
+        l = lmat[k]
+        act = ~done & (t < hi)
+        cand = t + rem * l
+        fdone = act & (cand <= hi)
+        fin[fdone] = cand[fdone]
+        done |= fdone
+        part = act & ~fdone
+        if part.any():
+            rem[part] = np.maximum(rem[part] - (hi - t[part]) / l[part], 0.0)
+            t[part] = hi
+    return fin
+
+
+def simulate_arrays(schedule: Schedule, telemetry: bool = False,
+                    timeline=None):
     """Vectorized max-plus replay of a `vec_exact` schedule.
 
     Bit-identical to `simulate_reference` on eligible schedules: every start
     is the max of the same IEEE values the event loop would have observed,
     and every finish is the same single addition. ``telemetry=True``
     attaches a post-hoc `repro.obs.FlowTelemetry` (timings unchanged).
+
+    ``timeline=`` (a `repro.core.model.FaultTimeline`) makes NIC rates
+    piecewise-constant in time: the max-plus recurrence is unchanged (port
+    service order is forced by the vec_exact contract, independent of
+    durations), but each NIC wire flow's finish comes from
+    `_segmented_finish` instead of one multiply-add. A timeline with no
+    effective breakpoints degenerates to the static path bit-for-bit.
     """
     from repro.core.simulator import SimResult   # circular at module load
 
@@ -129,7 +172,13 @@ def simulate_arrays(schedule: Schedule, telemetry: bool = False):
     if n == 0:
         return SimResult(0.0, {}, {}, {})
     prof = schedule.profile
-    sl = np.asarray(prof.slowdown, np.float64)
+    tl_breaks: tuple = ()
+    if timeline is not None:
+        tl_breaks, tl_vecs = timeline.segments(prof)
+        sl = np.asarray(tl_vecs[0], np.float64)
+    else:
+        sl = np.asarray(prof.slowdown, np.float64)
+    tl_on = bool(tl_breaks)
     dur = fa.size * np.maximum(sl[fa.src], sl[fa.dst])
     if fa.nv.any():
         dur[fa.nv] = fa.size[fa.nv] / prof.nvlink_rate
@@ -150,6 +199,16 @@ def simulate_arrays(schedule: Schedule, telemetry: bool = False):
     rel_o = fa.release[order]
     dur_o = dur[order]
     wire_o = fa.size[order] > 0
+    if tl_on:
+        size_o = fa.size[order]
+        # [nsegs, n] effective slowdown per segment in processing order.
+        src_o, dst_o = fa.src[order], fa.dst[order]
+        lmax_all = np.stack([
+            np.maximum(np.asarray(v, np.float64)[src_o],
+                       np.asarray(v, np.float64)[dst_o])
+            for v in tl_vecs])
+        seg_mask = wire_o & ~fa.nv[order]   # NIC wire flows get re-timed
+        breaks_arr = np.asarray(tl_breaks, np.float64)
 
     # Dependency CSR re-indexed to processing positions.
     counts = np.diff(fa.dep_indptr)
@@ -229,7 +288,14 @@ def simulate_arrays(schedule: Schedule, telemetry: bool = False):
             edge_max = np.maximum.reduceat(vals, off)
             np.maximum(s, np.where(ne, edge_max, neg), out=s)
         start[b] = s
-        finish[b] = s + dur_o[b]
+        fb = s + dur_o[b]
+        if tl_on:
+            mb = np.nonzero(seg_mask[b])[0]
+            if len(mb):
+                fb[mb] = _segmented_finish(s[mb], size_o[b][mb],
+                                           lmax_all[:, i0:i1][:, mb],
+                                           breaks_arr)
+        finish[b] = fb
         i0 = i1
 
     makespan = float(finish.max())
@@ -239,9 +305,12 @@ def simulate_arrays(schedule: Schedule, telemetry: bool = False):
         finish_d = dict(zip(order.tolist(), finish.tolist()))
         busy: dict[tuple, float] = {}
         kinds = np.where(fa.nv[order], "nv", "nic")
+        # Under a timeline the wire occupancy is the realized finish-start
+        # span, not the segment-0 duration.
+        eff_dur = (finish - start) if tl_on else dur_o
         for i in w.tolist():
             k = str(kinds[i])
-            d = float(dur_o[i])
+            d = float(eff_dur[i])
             a, b_ = int(fa.src[order[i]]), int(fa.dst[order[i]])
             busy[(k, a, "s")] = busy.get((k, a, "s"), 0.0) + d
             busy[(k, b_, "r")] = busy.get((k, b_, "r"), 0.0) + d

@@ -80,6 +80,22 @@ def lower_bound(p: int, n: float, ells: Sequence[float], g: int = 1) -> float:
     return lb_multi_straggler(p, n, stragglers)
 
 
+def timeline_lower_bound(profile, timeline, n: float) -> float:
+    """Lower bound for a run under a `FaultTimeline` (core.model).
+
+    Uses the static bound of the per-rank *best-ever* profile
+    (`timeline.min_profile`): the flow model is monotone in the slowdown
+    vector (every flow is pointwise no slower when every rank is at its
+    fastest-ever rate), so the static bound of that profile bounds any
+    schedule under the timeline. Deliberately not an integral/averaged
+    bound - those are not sound when the adversary controls *when* work is
+    scheduled relative to the fault windows.
+    """
+    best = timeline.min_profile(profile)
+    ells = [l for l in best.slowdown if l > 1.0]
+    return lower_bound(best.p, n, ells, best.gpus_per_server)
+
+
 # ----------------------------------------------------------------------------
 # Achieved-time closed forms for OptCC (Section 4.3, Appendices C, D.3, E.4)
 #

@@ -173,6 +173,139 @@ class BandwidthProfile:
         return self.p // self.gpus_per_server
 
 
+@dataclasses.dataclass(frozen=True)
+class FaultEvent:
+    """One rate change: from time ``t`` on, ``rank``'s NIC slowdown is
+    ``ell`` (absolute, not a delta; ``ell == 1.0`` means fully recovered).
+
+    Times are in element-time units of the flow model, the same clock the
+    simulator runs on. Events at ``t == 0`` rewrite the initial profile
+    (a recovery at t=0 on a degraded base is exactly the healthy cluster).
+    """
+
+    t: float
+    rank: int
+    ell: float
+
+    def __post_init__(self):
+        if not (self.t >= 0.0 and self.t == self.t and self.t != float("inf")):
+            raise ValueError(f"event time must be finite and >= 0, got {self.t}")
+        if self.ell < 1.0:
+            raise ValueError(f"slowdown must be >= 1, got {self.ell}")
+        if self.rank < 0:
+            raise ValueError(f"rank must be >= 0, got {self.rank}")
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultTimeline:
+    """A failure timeline: piecewise-constant per-rank slowdowns layered on a
+    BandwidthProfile. Real clusters degrade *over time* - NICs flap, traffic
+    reroutes, links recover mid-collective (the R2CCL failure catalogs, the
+    Alibaba-GPU-2020 / AcmeTrace fault traces) - and a static profile cannot
+    express that. The timeline is the additive piece: the base profile gives
+    the slowdown vector at t=0 and each event rewrites one rank's rate from
+    its time on. Only NIC rates vary; NVLink is never degraded (same
+    assumption as the static model).
+
+    Events are kept sorted by (t, rank, insertion order); later events on the
+    same rank win. The timeline itself is profile-agnostic - `segments`
+    resolves it against a concrete base profile into breakpoints + per-segment
+    slowdown vectors, skipping no-op changes so a timeline that never alters
+    the effective vector has no breakpoints at all (and the simulator then
+    takes the static path, bit-for-bit).
+    """
+
+    events: tuple[FaultEvent, ...] = ()
+
+    def __post_init__(self):
+        evs = tuple(self.events)
+        if any(not isinstance(e, FaultEvent) for e in evs):
+            raise TypeError("events must be FaultEvent instances; "
+                            "use FaultTimeline.make for (t, rank, ell) tuples")
+        order = sorted(range(len(evs)), key=lambda i: (evs[i].t, evs[i].rank, i))
+        object.__setattr__(self, "events", tuple(evs[i] for i in order))
+
+    @classmethod
+    def make(cls, events: Sequence) -> "FaultTimeline":
+        """Build from an iterable of FaultEvent or (t, rank, ell) tuples."""
+        return cls(tuple(e if isinstance(e, FaultEvent) else FaultEvent(*e)
+                         for e in events))
+
+    def slowdown_at(self, profile: "BandwidthProfile",
+                    t: float) -> tuple[float, ...]:
+        """Effective slowdown vector at time t (events with ``e.t <= t``
+        applied to the base profile, in order)."""
+        sl = list(profile.slowdown)
+        for e in self.events:
+            if e.t > t:
+                break
+            if e.rank >= profile.p:
+                raise ValueError(f"event rank {e.rank} >= p={profile.p}")
+            sl[e.rank] = e.ell
+        return tuple(sl)
+
+    def profile_at(self, profile: "BandwidthProfile",
+                   t: float) -> "BandwidthProfile":
+        """The static BandwidthProfile in effect at time t."""
+        return dataclasses.replace(profile, slowdown=self.slowdown_at(profile, t))
+
+    def segments(self, profile: "BandwidthProfile"
+                 ) -> tuple[tuple[float, ...], tuple[tuple[float, ...], ...]]:
+        """Resolve against a base profile: (breakpoints, vectors).
+
+        breakpoints are strictly increasing times > 0 at which the effective
+        slowdown vector *changes value*; vectors[j] is the slowdown tuple in
+        force on [breakpoints[j-1], breakpoints[j]) (vectors[0] from t=0,
+        already including any t=0 events). len(vectors) == len(breaks) + 1.
+        No-op events (rewriting a rank to its current value) produce no
+        breakpoint, so a constant timeline resolves to ([], [initial]).
+        """
+        sl = list(profile.slowdown)
+        for e in self.events:
+            if e.rank >= profile.p:
+                raise ValueError(f"event rank {e.rank} >= p={profile.p}")
+        i = 0
+        evs = self.events
+        while i < len(evs) and evs[i].t <= 0.0:
+            sl[evs[i].rank] = evs[i].ell
+            i += 1
+        breaks: list[float] = []
+        vectors: list[tuple[float, ...]] = [tuple(sl)]
+        while i < len(evs):
+            t = evs[i].t
+            while i < len(evs) and evs[i].t == t:
+                sl[evs[i].rank] = evs[i].ell
+                i += 1
+            vec = tuple(sl)
+            if vec != vectors[-1]:
+                breaks.append(t)
+                vectors.append(vec)
+        return tuple(breaks), tuple(vectors)
+
+    def is_constant(self, profile: "BandwidthProfile") -> bool:
+        """True when the effective slowdown vector never changes after t=0
+        (the simulator then reduces to the static profile_at(0) run)."""
+        return not self.segments(profile)[0]
+
+    def after(self, t0: float) -> "FaultTimeline":
+        """The residual timeline seen by a plan launched at absolute time t0:
+        events at or before t0 are dropped (fold them into the launch profile
+        via `profile_at`), later ones shift to the plan's local clock."""
+        return FaultTimeline(tuple(
+            FaultEvent(e.t - t0, e.rank, e.ell)
+            for e in self.events if e.t > t0))
+
+    def min_profile(self, profile: "BandwidthProfile") -> "BandwidthProfile":
+        """Per-rank best-ever rates over the whole timeline: the static
+        profile in which every NIC always runs at the fastest rate it ever
+        reaches. Any run under the timeline is pointwise no faster than the
+        same run under this profile (rates only get better), so its static
+        lower bound is a valid bound for the time-varying run."""
+        _, vectors = self.segments(profile)
+        best = [min(vec[r] for vec in vectors) for r in range(profile.p)]
+        return dataclasses.replace(profile, slowdown=tuple(best))
+
+
 @dataclasses.dataclass
 class Schedule:
     """A complete flow schedule plus NVLink flows (multi-GPU setting).

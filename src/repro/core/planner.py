@@ -19,7 +19,7 @@ from collections.abc import Mapping
 import numpy as np
 
 from repro.core import lower_bounds as lb
-from repro.core.model import BandwidthProfile, Schedule
+from repro.core.model import BandwidthProfile, FaultTimeline, Schedule
 from repro.core.schedule import optcc_schedule
 
 
@@ -160,4 +160,131 @@ def make_plan(profile: BandwidthProfile, n: int, k: int = 16,
         t0=lb.t0_fault_free(profile.p, n, g),
         gen_seconds=gen_s,
         descriptor=descriptor,
+    )
+
+
+@dataclasses.dataclass
+class ReplayResult:
+    """Outcome of `replay`: one collective run under a failure timeline,
+    with and without mid-flight re-planning.
+
+    ``t_noreplan`` is the original plan ridden through every rate change;
+    ``t_chain`` is the replanned chain's completion time (splice at each
+    breakpoint: drain the in-flight flows, re-plan the remaining elements
+    for the rates then in force, repeat on the residual timeline). The
+    controller modeled here sees both and adopts the better one, so the
+    reported ``t_replan`` is their min - re-planning can only help.
+    """
+
+    profile: BandwidthProfile      # base profile (timeline t=0 events folded)
+    timeline: FaultTimeline
+    n: float
+    t_noreplan: float              # original plan under the full timeline
+    t_chain: float                 # replanned chain completion time
+    replans: int                   # splices performed along the chain
+    lower_bound: float             # timeline_lower_bound (best-ever rates)
+    t0: float                      # fault-free optimum for (p, n, g)
+    plan0: Plan                    # the initial plan (before any splice)
+    # SimResult of the no-replan run (plan0 under the full timeline) - kept
+    # so callers can attribute t_noreplan per stage (repro.obs) without
+    # re-simulating.
+    noreplan_result: object = None
+
+    @property
+    def t_replan(self) -> float:
+        """Makespan with the re-planning controller on (adopts the better)."""
+        return min(self.t_chain, self.t_noreplan)
+
+    @property
+    def adopted_replan(self) -> bool:
+        return self.t_chain < self.t_noreplan
+
+
+def replay(profile: BandwidthProfile, n: int, timeline: FaultTimeline,
+           k: int = 16, fill_bubbles: bool = True,
+           max_replans: int = 8) -> ReplayResult:
+    """Run one AllReduce under a failure timeline, re-planning mid-flight.
+
+    The no-replan baseline simulates the initial plan (built for the
+    profile in force at t=0, timeline t<=0 events folded in) under the full
+    timeline. The replan chain models the runtime's failure detector firing
+    at each effective breakpoint b:
+
+      * flows already on the wire at b drain to completion (they hold their
+        ports and never wait again, so their finishes in the no-replan
+        simulation are already exact);
+      * flows not yet started are cancelled; the work they carried -
+        ``(1 - progress)`` of the current vector, measured in NIC wire
+        elements - is re-planned from scratch via `make_plan` against the
+        profile in force at the drain time, and the residual timeline
+        (later events, shifted to the new plan's clock) recurses.
+
+    The chain is an idealized controller (zero detection and generation
+    latency - `make_plan` is < 1 ms against multi-second collectives, so
+    the approximation is tight) and the adopted result is
+    ``min(chain, no-replan)``: see `ReplayResult`.
+
+    The strict wins come from slotted OptCC's release times: they are
+    computed for the *degraded* rates, so after a recovery the no-replan
+    schedule still paces itself as if the straggler were there, while the
+    replanned remainder runs at full speed.
+    """
+    from repro.core.simulator import simulate
+
+    if max_replans < 0:
+        raise ValueError("max_replans must be >= 0")
+    base = timeline.profile_at(profile, 0.0)
+    tl0 = timeline.after(0.0)
+    plan0 = make_plan(base, n, k, fill_bubbles)
+    res0 = simulate(plan0.schedule, timeline=tl0)
+    t_noreplan = res0.makespan
+
+    # Replanned chain: walk breakpoints, splicing a fresh plan at each.
+    t_off = 0.0
+    n_cur = float(n)
+    prof_cur = base
+    tl_cur = tl0
+    plan_cur, res_cur = plan0, res0
+    replans = 0
+    t_chain = t_noreplan
+    while True:
+        breaks, _ = tl_cur.segments(prof_cur)
+        b = next((bt for bt in breaks if bt < res_cur.makespan), None)
+        if b is None or replans >= max_replans:
+            t_chain = t_off + res_cur.makespan
+            break
+        starts = res_cur.start
+        finishes = res_cur.finish
+        wire = [f for f in plan_cur.schedule.nic_flows if f.size > 0]
+        started = [f for f in wire if starts[f.fid] < b]
+        total_work = sum(f.size for f in wire)
+        done_work = sum(f.size for f in started)
+        progress = done_work / total_work if total_work else 1.0
+        n_rem = int(round(n_cur * (1.0 - progress)))
+        if n_rem <= 0:
+            # Everything is already on the wire; nothing left to re-plan.
+            t_chain = t_off + res_cur.makespan
+            break
+        # Drain: in-flight flows keep their ports until done, so their
+        # finishes in res_cur are exact regardless of the cancellations.
+        t_d = max([b] + [finishes[f.fid] for f in started])
+        prof_cur = tl_cur.profile_at(prof_cur, t_d)
+        tl_cur = tl_cur.after(t_d)
+        t_off += t_d
+        n_cur = float(n_rem)
+        replans += 1
+        plan_cur = make_plan(prof_cur, n_rem, k, fill_bubbles)
+        res_cur = simulate(plan_cur.schedule, timeline=tl_cur)
+
+    return ReplayResult(
+        profile=base,
+        timeline=tl0,
+        n=float(n),
+        t_noreplan=t_noreplan,
+        t_chain=t_chain,
+        replans=replans,
+        lower_bound=lb.timeline_lower_bound(base, tl0, n),
+        t0=lb.t0_fault_free(base.p, n, base.gpus_per_server),
+        plan0=plan0,
+        noreplan_result=res0,
     )

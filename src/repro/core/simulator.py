@@ -44,7 +44,8 @@ from typing import Callable, Iterable, Optional, Sequence
 
 import numpy as np
 
-from repro.core.model import BandwidthProfile, Flow, Schedule
+from repro.core.model import (BandwidthProfile, FaultTimeline, Flow,
+                              Schedule)
 
 
 class SimResult:
@@ -126,7 +127,8 @@ def _attach_telemetry(schedule: Schedule, result: "SimResult") -> "SimResult":
     return result
 
 
-def simulate(schedule: Schedule, telemetry: bool = False) -> SimResult:
+def simulate(schedule: Schedule, telemetry: bool = False,
+             timeline: Optional[FaultTimeline] = None) -> SimResult:
     """Run the schedule to completion; returns makespan and per-flow times.
 
     Dispatches to the vectorized fast path when the schedule certifies it is
@@ -134,25 +136,46 @@ def simulate(schedule: Schedule, telemetry: bool = False) -> SimResult:
     reference event loop. Both paths agree bit-for-bit on eligible
     schedules (tests/test_vectorized_equivalence.py).
 
+    With ``timeline=`` the run honors a `FaultTimeline`: per-rank NIC rates
+    are piecewise-constant in time, in-flight flows are re-timed at every
+    breakpoint (remaining elements carry over at the new rate), and flows
+    starting after a breakpoint use the rates then in force. A timeline
+    whose effective slowdown vector never changes after t=0 degenerates to
+    the static run of `timeline.profile_at(schedule.profile, 0)` -
+    bit-for-bit, because the timeline machinery is skipped entirely. The
+    `vec_exact` fast path stays exact under timelines: forced port order is
+    a structural property, so only the finish arithmetic changes (a
+    segmented pass mirroring the event loops op-for-op; equality pinned by
+    tests/test_replay.py).
+
     With ``telemetry=True`` the result additionally carries a
     `repro.obs.FlowTelemetry` (``result.telemetry``) derived from the same
     start/finish times - timings are identical either way.
     """
     if schedule.meta.get("vec_exact"):
         from repro.core import flowvec
-        res = flowvec.simulate_arrays(schedule)
+        res = flowvec.simulate_arrays(schedule, timeline=timeline)
     else:
-        res = _simulate_greedy_fast(schedule)
+        res = _simulate_greedy_fast(schedule, timeline=timeline)
     return _attach_telemetry(schedule, res) if telemetry else res
 
 
-def _simulate_greedy_fast(schedule: Schedule) -> SimResult:
+def _simulate_greedy_fast(schedule: Schedule,
+                          timeline: Optional[FaultTimeline] = None
+                          ) -> SimResult:
     """Greedy event loop over columnar arrays: identical semantics and
     results to `simulate_reference`, ~3x faster (int ports, precomputed
     durations and priorities, no per-flow dataclass traffic). Used for the
     schedules whose dispatch is genuinely dynamic (multi-straggler,
     multi-GPU, hand-built graphs); bit-equality with the reference loop is
-    enforced by tests/test_vectorized_equivalence.py.
+    enforced by tests/test_vectorized_equivalence.py (static) and
+    tests/test_replay.py (timelines).
+
+    Timeline semantics: at each breakpoint every in-flight NIC wire flow is
+    re-timed - remaining elements = rem - elapsed/l_old, new finish =
+    now + rem * l_new - and its queued finish event goes stale (skipped on
+    pop via a finish-time match). NVLink flows are never degraded and are
+    never re-timed; zero-size flows hold no ports and finish instantly.
     """
     from repro.core import flowvec
 
@@ -165,7 +188,13 @@ def _simulate_greedy_fast(schedule: Schedule) -> SimResult:
     if fa.nv.any():
         assert profile.gpus_per_server > 1, \
             "NVLink flows require gpus_per_server > 1"
-    sl = np.asarray(profile.slowdown, np.float64)
+    tl_breaks: tuple = ()
+    if timeline is not None:
+        tl_breaks, tl_vecs = timeline.segments(profile)
+        sl = np.asarray(tl_vecs[0], np.float64)
+    else:
+        sl = np.asarray(profile.slowdown, np.float64)
+    tl_on = bool(tl_breaks)
     dur_a = fa.size * np.maximum(sl[fa.src], sl[fa.dst])
     if fa.nv.any():
         dur_a[fa.nv] = fa.size[fa.nv] / profile.nvlink_rate
@@ -203,6 +232,20 @@ def _simulate_greedy_fast(schedule: Schedule) -> SimResult:
         dep_rows = []
         dptr = [0] * (n + 1)
 
+    # Strict in-order port service (slotted schedules). Statically the
+    # slotted layout is collision-free, so greedy dispatch coincides with
+    # in-order service and this never triggers - but under a timeline the
+    # rates shift mid-run and opportunistic dispatch would deviate from the
+    # reference loop, so the check must be real here too.
+    inorder = bool(schedule.meta.get("port_inorder"))
+    port_head = [0] * nports
+    port_seq: list[list[int]] = [[] for _ in range(nports)]
+    if inorder:
+        for fid in sorted(range(n), key=lambda i: (pri_key[i], i)):
+            if size[fid] > 0:
+                port_seq[sport[fid]].append(fid)
+                port_seq[rport[fid]].append(fid)
+
     port_free = [True] * nports
     waiting: list[list] = [[] for _ in range(nports)]
     port_busy = [0.0] * nports
@@ -210,12 +253,32 @@ def _simulate_greedy_fast(schedule: Schedule) -> SimResult:
     woken = [False] * n
     start_t = [0.0] * n
     finish_t = [0.0] * n
-    events: list[tuple[float, int, int, bool]] = []
+    # Event kinds: 0 = flow finish, 1 = release wake-up, 2 = rate change
+    # (fid then indexes the timeline breakpoint).
+    events: list[tuple[float, int, int, int]] = []
     seq = 0
     now = 0.0
     nfinished = 0
     push = heapq.heappush
     pop = heapq.heappop
+
+    if tl_on:
+        # Per-segment effective slowdown per flow (NIC wire flows only) +
+        # in-flight re-timing state. `fdone` guards against stale finish
+        # events re-finishing a re-timed flow.
+        lmax_segs = [np.maximum(np.asarray(v, np.float64)[fa.src],
+                                np.asarray(v, np.float64)[fa.dst]).tolist()
+                     for v in tl_vecs]
+        nicw = ((fa.size > 0) & ~fa.nv).tolist()
+        rem = [0.0] * n
+        tbase = [0.0] * n
+        lcur = [0.0] * n
+        fdone = [False] * n
+        inflight: set[int] = set()
+        seg_idx = 0
+        for j, bt in enumerate(tl_breaks):
+            push(events, (bt, seq, j, 2))
+            seq += 1
 
     def try_start(fid: int) -> bool:
         nonlocal seq
@@ -224,26 +287,40 @@ def _simulate_greedy_fast(schedule: Schedule) -> SimResult:
         if not simple and release[fid] > now:
             if not woken[fid]:
                 woken[fid] = True
-                push(events, (release[fid], seq, fid, True))
+                push(events, (release[fid], seq, fid, 1))
                 seq += 1
             return False
         if size[fid] <= 0:
             started[fid] = True
             start_t[fid] = finish_t[fid] = now
-            push(events, (now, seq, fid, False))
+            push(events, (now, seq, fid, 0))
             seq += 1
             return True
         sp, rp = sport[fid], rport[fid]
         if not (port_free[sp] and port_free[rp]):
             return False
+        if inorder and (port_seq[sp][port_head[sp]] != fid
+                        or port_seq[rp][port_head[rp]] != fid):
+            return False
         port_free[sp] = port_free[rp] = False
+        if inorder:
+            port_head[sp] += 1
+            port_head[rp] += 1
         started[fid] = True
-        d = dur[fid]
+        if tl_on and nicw[fid]:
+            l = lmax_segs[seg_idx][fid]
+            d = size[fid] * l
+            rem[fid] = size[fid]
+            tbase[fid] = now
+            lcur[fid] = l
+            inflight.add(fid)
+        else:
+            d = dur[fid]
         start_t[fid] = now
         finish_t[fid] = now + d
         port_busy[sp] += d
         port_busy[rp] += d
-        push(events, (now + d, seq, fid, False))
+        push(events, (now + d, seq, fid, 0))
         seq += 1
         return True
 
@@ -266,13 +343,25 @@ def _simulate_greedy_fast(schedule: Schedule) -> SimResult:
         now = events[0][0]
         done_batch: list[int] = []
         wake_batch: list[int] = []
+        rate_batch: list[int] = []
         while events and events[0][0] == now:
-            _, _, fid, is_wake = pop(events)
-            (wake_batch if is_wake else done_batch).append(fid)
+            _, _, fid, kind = pop(events)
+            if kind == 0:
+                if tl_on:
+                    if fdone[fid] or finish_t[fid] != now:
+                        continue        # stale event from before a re-time
+                    fdone[fid] = True
+                done_batch.append(fid)
+            elif kind == 1:
+                wake_batch.append(fid)
+            else:
+                rate_batch.append(fid)
         newly_ready: list[int] = []
         freed_ports: list[int] = []
         for fid in done_batch:
             nfinished += 1
+            if tl_on:
+                inflight.discard(fid)
             if size[fid] > 0:
                 sp, rp = sport[fid], rport[fid]
                 port_free[sp] = port_free[rp] = True
@@ -283,6 +372,29 @@ def _simulate_greedy_fast(schedule: Schedule) -> SimResult:
                 ndeps[dep] -= 1
                 if ndeps[dep] == 0:
                     newly_ready.append(dep)
+        for bidx in rate_batch:
+            # Rates change at `now` *after* flows finishing exactly at `now`
+            # complete (zero remaining work) and *before* any flow starts at
+            # `now` (new arrivals see the new rates). Every in-flight NIC
+            # wire flow is re-timed with the carried-over remainder; the
+            # same arithmetic, in the same order, as flowvec's segmented
+            # pass - that is what keeps vec and scalar runs bit-identical.
+            seg_idx = bidx + 1
+            lm = lmax_segs[seg_idx]
+            for fid in sorted(inflight):
+                r = max(rem[fid] - (now - tbase[fid]) / lcur[fid], 0.0)
+                l_new = lm[fid]
+                rem[fid] = r
+                tbase[fid] = now
+                lcur[fid] = l_new
+                newf = now + r * l_new
+                if newf != finish_t[fid]:
+                    delta = newf - finish_t[fid]
+                    port_busy[sport[fid]] += delta
+                    port_busy[rport[fid]] += delta
+                    finish_t[fid] = newf
+                    push(events, (newf, seq, fid, 0))
+                    seq += 1
         for fid in wake_batch:
             if not started[fid] and ndeps[fid] == 0:
                 woken[fid] = False
@@ -329,9 +441,23 @@ def _simulate_greedy_fast(schedule: Schedule) -> SimResult:
 
 
 def simulate_reference(schedule: Schedule,
-                       telemetry: bool = False) -> SimResult:
-    """Scalar discrete-event loop: the semantics oracle for `simulate`."""
+                       telemetry: bool = False,
+                       timeline: Optional[FaultTimeline] = None) -> SimResult:
+    """Scalar discrete-event loop: the semantics oracle for `simulate`.
+
+    Honors a `FaultTimeline` with the same semantics as the fast paths
+    (piecewise-constant NIC rates; in-flight flows carry their remaining
+    elements across breakpoints at the new rate); tests/test_replay.py pins
+    bit-equality against both.
+    """
     profile = schedule.profile
+    tl_breaks: tuple = ()
+    if timeline is not None:
+        tl_breaks, tl_vecs = timeline.segments(profile)
+        sl = list(tl_vecs[0])
+    else:
+        sl = list(profile.slowdown)
+    tl_on = bool(tl_breaks)
     flows: dict[int, tuple[Flow, str]] = {}
     for f in schedule.nic_flows:
         flows[f.fid] = (f, "nic")
@@ -388,15 +514,27 @@ def simulate_reference(schedule: Schedule,
     woken: set[int] = set()
     start_t: dict[int, float] = {}
     finish_t: dict[int, float] = {}
-    # (time, seq, fid, is_wake); wake events re-attempt releases.
-    events: list[tuple[float, int, int, bool]] = []
+    # (time, seq, fid, kind); kind 0 = finish, 1 = release wake-up,
+    # 2 = rate change (fid indexes the timeline breakpoint).
+    events: list[tuple[float, int, int, int]] = []
     seq = 0
     now = 0.0
 
-    def push_event(t: float, fid: int, is_wake: bool) -> None:
+    # Timeline re-timing state (NIC wire flows in flight only).
+    seg_idx = 0
+    rem: dict[int, float] = {}
+    tbase: dict[int, float] = {}
+    lcur: dict[int, float] = {}
+    inflight: set[int] = set()
+
+    def push_event(t: float, fid: int, kind: int) -> None:
         nonlocal seq
-        heapq.heappush(events, (t, seq, fid, is_wake))
+        heapq.heappush(events, (t, seq, fid, kind))
         seq += 1
+
+    if tl_on:
+        for j, bt in enumerate(tl_breaks):
+            push_event(bt, j, 2)
 
     def try_start(fid: int) -> bool:
         if fid in started:
@@ -405,13 +543,13 @@ def simulate_reference(schedule: Schedule,
         if f.release > now:
             if fid not in woken:
                 woken.add(fid)
-                push_event(f.release, fid, True)
+                push_event(f.release, fid, 1)
             return False
         if f.size <= 0:
             # Bookkeeping flow (self-store): no wire traffic, no ports.
             started.add(fid)
             start_t[fid] = finish_t[fid] = now
-            push_event(now, fid, False)
+            push_event(now, fid, 0)
             return True
         sp, rp = ports_of(fid)
         if not (port_free[sp] and port_free[rp]):
@@ -424,12 +562,21 @@ def simulate_reference(schedule: Schedule,
             port_head[sp] += 1
             port_head[rp] += 1
         started.add(fid)
-        dur = _flow_duration(f, profile, kind)
+        if kind == "nv":
+            dur = f.size / profile.nvlink_rate
+        else:
+            l = max(sl[f.src], sl[f.dst])
+            dur = f.size * l
+            if tl_on:
+                rem[fid] = f.size
+                tbase[fid] = now
+                lcur[fid] = l
+                inflight.add(fid)
         start_t[fid] = now
         finish_t[fid] = now + dur
         port_busy[sp] = port_busy.get(sp, 0.0) + dur
         port_busy[rp] = port_busy.get(rp, 0.0) + dur
-        push_event(now + dur, fid, False)
+        push_event(now + dur, fid, 0)
         return True
 
     def enqueue_ready(fid: int) -> None:
@@ -445,15 +592,28 @@ def simulate_reference(schedule: Schedule,
             enqueue_ready(fid)
 
     while events:
-        now, done_batch, wake_batch = events[0][0], [], []
-        # Pop every event at `now` (simultaneous completions/wakes).
+        now = events[0][0]
+        done_batch: list[int] = []
+        wake_batch: list[int] = []
+        rate_batch: list[int] = []
+        # Pop every event at `now` (simultaneous completions/wakes/rates).
         while events and events[0][0] == now:
-            _, _, fid, is_wake = heapq.heappop(events)
-            (wake_batch if is_wake else done_batch).append(fid)
+            _, _, fid, kind = heapq.heappop(events)
+            if kind == 0:
+                if tl_on:
+                    if fid in finished or finish_t.get(fid) != now:
+                        continue        # stale event from before a re-time
+                done_batch.append(fid)
+            elif kind == 1:
+                wake_batch.append(fid)
+            else:
+                rate_batch.append(fid)
         newly_ready: list[int] = []
         freed_ports: list[tuple] = []
         for fid in done_batch:
             finished.add(fid)
+            if tl_on:
+                inflight.discard(fid)
             if flows[fid][0].size > 0:       # zero flows never held ports
                 sp, rp = ports_of(fid)
                 port_free[sp] = port_free[rp] = True
@@ -462,6 +622,28 @@ def simulate_reference(schedule: Schedule,
                 ndeps[dep] -= 1
                 if ndeps[dep] == 0:
                     newly_ready.append(dep)
+        for bidx in rate_batch:
+            # Rates change at `now` *after* flows finishing exactly at `now`
+            # complete and *before* any flow starts at `now` — identical
+            # ordering and arithmetic to _simulate_greedy_fast / flowvec so
+            # all three paths stay bit-identical.
+            seg_idx = bidx + 1
+            sl = list(tl_vecs[seg_idx])
+            for fid in sorted(inflight):
+                f = flows[fid][0]
+                r = max(rem[fid] - (now - tbase[fid]) / lcur[fid], 0.0)
+                l_new = max(sl[f.src], sl[f.dst])
+                rem[fid] = r
+                tbase[fid] = now
+                lcur[fid] = l_new
+                newf = now + r * l_new
+                if newf != finish_t[fid]:
+                    delta = newf - finish_t[fid]
+                    sp, rp = ports_of(fid)
+                    port_busy[sp] += delta
+                    port_busy[rp] += delta
+                    finish_t[fid] = newf
+                    push_event(newf, fid, 0)
         for fid in wake_batch:
             if fid not in started and ndeps[fid] == 0:
                 woken.discard(fid)

@@ -18,6 +18,22 @@ optcc-sweep/2 (vs /1):
   * wall-clock fields (``gen_ms``/``sim_ms``, summary ``gen_ms_p50/p99``)
     are null on deterministic runs instead of 0.0 - unmeasured is not zero,
     and the old 0.0 silently satisfied every latency threshold.
+
+optcc-sweep/3 (vs /2):
+  * replay-family scenarios (time-varying failure timelines) carry
+    ``events`` ([t, rank, ell] triples, t in units of T0), ``t_noreplan`` /
+    ``overhead_noreplan`` (the initial plan ridden through the whole
+    timeline - the baseline re-planning is scored against) and ``replans``
+    (splices made). For these rows t_optcc is the makespan the mid-flight
+    re-planning controller *adopts* (min of the replanned chain and the
+    no-replan run), so overhead_optcc / optcc_vs_lb score the system's
+    actual behavior; the stage_breakdown attributes the no-replan run and
+    sums to t_noreplan for replay rows;
+  * summary groups containing replay scenarios add
+    ``overhead_noreplan_p50/p99/max``;
+  * thresholds gain a ``families`` block ({family: {metric_max: limit,
+    min_scenarios: N}}); a gated family missing from the artifact fails
+    loudly (a grid regression must not silently pass).
 """
 from __future__ import annotations
 
@@ -31,7 +47,7 @@ __all__ = ["SCHEMA", "THRESHOLDS_SCHEMA", "percentile", "scenario_record",
            "build_artifact", "canonical_bytes", "write_artifact",
            "load_artifact", "validate_artifact", "check_thresholds"]
 
-SCHEMA = "optcc-sweep/2"
+SCHEMA = "optcc-sweep/3"
 THRESHOLDS_SCHEMA = "optcc-sweep-thresholds/1"
 
 _SCENARIO_REQUIRED = {
@@ -85,6 +101,15 @@ def scenario_record(r: ScenarioResult, deterministic: bool = False) -> dict:
         "gen_ms": None if deterministic else _round(r.gen_seconds * 1e3, 6),
         "sim_ms": None if deterministic else _round(r.sim_seconds * 1e3, 6),
     }
+    if r.t_noreplan is not None:
+        # Replay family: t_optcc above is the re-planning controller's
+        # adopted makespan; these are the no-replan baseline (the initial
+        # plan ridden through the whole timeline) plus the timeline itself.
+        rec["t_noreplan"] = _round(r.t_noreplan)
+        rec["overhead_noreplan"] = _round(r.overhead_noreplan)
+        rec["replans"] = r.replans
+        rec["events"] = [[_round(t), rank, _round(ell)]
+                         for t, rank, ell in s.events]
     if r.stage_breakdown is not None:
         rec["stage_breakdown"] = {st: _round(v)
                                   for st, v in sorted(r.stage_breakdown.items())}
@@ -122,6 +147,12 @@ def _summarize(records: Sequence[dict], telemetry: bool = False) -> dict:
         "gen_ms_p50": _round(percentile_or_none(gen, 50), 6),
         "gen_ms_p99": _round(percentile_or_none(gen, 99), 6),
     }
+    rep = [r["overhead_noreplan"] for r in records
+           if "overhead_noreplan" in r]
+    if rep:
+        out["overhead_noreplan_p50"] = _round(percentile(rep, 50))
+        out["overhead_noreplan_p99"] = _round(percentile(rep, 99))
+        out["overhead_noreplan_max"] = _round(max(rep))
     if telemetry:
         out["stages"] = _stage_summary(records)
     return out
@@ -175,7 +206,7 @@ def _migrate_v1(obj: dict) -> dict:
     """In-place upgrade of an optcc-sweep/1 artifact to /2 semantics:
     no telemetry, and deterministic runs' 0.0 wall-clock placeholders become
     null (v1 wrote zeros for unmeasured latencies)."""
-    obj["schema"] = SCHEMA
+    obj["schema"] = "optcc-sweep/2"
     obj["telemetry"] = False
     if obj.get("deterministic"):
         for rec in obj.get("scenarios", ()):
@@ -189,6 +220,13 @@ def _migrate_v1(obj: dict) -> dict:
     return obj
 
 
+def _migrate_v2(obj: dict) -> dict:
+    """optcc-sweep/2 -> /3: purely additive (replay fields are optional and
+    a v2 artifact simply predates the replay family), so only the tag moves."""
+    obj["schema"] = SCHEMA
+    return obj
+
+
 def load_artifact(path: str) -> dict:
     # NaN/Infinity would sail through every comparison in validation and
     # threshold gating (NaN > limit is False), turning the CI gate green on
@@ -197,6 +235,8 @@ def load_artifact(path: str) -> dict:
         obj = json.load(f, parse_constant=_reject_constant)
     if obj.get("schema") == "optcc-sweep/1":
         obj = _migrate_v1(obj)
+    if obj.get("schema") == "optcc-sweep/2":
+        obj = _migrate_v2(obj)
     return obj
 
 
@@ -247,21 +287,42 @@ def validate_artifact(artifact: dict) -> list[str]:
             errs.append(f"{rec['name']}: t_optcc beats the lower bound")
         if rec["overhead_lb"] > rec["overhead_optcc"] * (1 + 1e-9):
             errs.append(f"{rec['name']}: overhead_lb > overhead_optcc")
+        if rec["family"] == "replay":
+            if not isinstance(rec.get("t_noreplan"), (int, float)):
+                errs.append(f"{rec['name']}: replay scenario lacks "
+                            f"t_noreplan")
+            elif not isinstance(rec.get("replans"), int) \
+                    or rec["replans"] < 0:
+                errs.append(f"{rec['name']}: replay scenario needs a "
+                            f"non-negative int 'replans'")
+            elif not isinstance(rec.get("events"), list) or not rec["events"]:
+                errs.append(f"{rec['name']}: replay scenario lacks its "
+                            f"'events' timeline")
+            elif rec["t_optcc"] > rec["t_noreplan"] * (1 + 1e-9):
+                errs.append(f"{rec['name']}: adopted t_optcc exceeds the "
+                            f"no-replan baseline (the controller must take "
+                            f"the better schedule)")
+        elif "t_noreplan" in rec:
+            errs.append(f"{rec['name']}: t_noreplan on a non-replay "
+                        f"scenario")
         sb = rec.get("stage_breakdown")
         if telemetry:
             # The tentpole invariant, enforced on every telemetry artifact:
             # critical-path stage contributions account for the *entire*
             # simulated time (1e-6 relative absorbs the 9-digit rounding).
+            # Replay rows attribute the no-replan run, so they sum to
+            # t_noreplan; everything else sums to t_optcc.
             if not isinstance(sb, dict) or not sb:
                 errs.append(f"{rec['name']}: telemetry artifact lacks "
                             f"stage_breakdown")
             else:
+                ref_key = "t_noreplan" if "t_noreplan" in rec else "t_optcc"
+                ref = rec[ref_key]
                 total = sum(sb.values())
-                if abs(total - rec["t_optcc"]) > 1e-6 * max(
-                        rec["t_optcc"], 1.0):
+                if abs(total - ref) > 1e-6 * max(ref, 1.0):
                     errs.append(
                         f"{rec['name']}: stage_breakdown sums to "
-                        f"{total:.9g}, t_optcc is {rec['t_optcc']:.9g}")
+                        f"{total:.9g}, {ref_key} is {ref:.9g}")
         elif sb is not None:
             errs.append(f"{rec['name']}: stage_breakdown present but "
                         f"telemetry is off")
@@ -321,6 +382,34 @@ def check_thresholds(artifact: dict, thresholds: dict) -> list[str]:
                         f"critical-path p99 overhead of stage {stage}: "
                         f"{got:.6g} > limit {limit:.6g} "
                         f"(stage_overhead_p99_max.{stage})")
+    # Per-family gates: {family: {"<metric>_max": limit, "min_scenarios": N}}.
+    # A family named in the thresholds file MUST be present in the artifact -
+    # a grid regression that silently drops a family (e.g. the replay
+    # scenarios failing to generate) must fail the gate, not skip it.
+    fam_limits = thresholds.get("families") or {}
+    by_family = artifact["summary"].get("by_family", {})
+    for fam, limits in sorted(fam_limits.items()):
+        stats = by_family.get(fam)
+        if stats is None:
+            fails.append(f"family {fam!r} is threshold-gated but absent "
+                         f"from the artifact (present: "
+                         f"{sorted(by_family)}); the grid lost a scenario "
+                         f"family")
+            continue
+        for key, limit in sorted(limits.items()):
+            if key == "min_scenarios":
+                if stats["count"] < limit:
+                    fails.append(f"family {fam}: count {stats['count']} < "
+                                 f"required {limit}")
+                continue
+            metric = key[:-4] if key.endswith("_max") else key
+            got = stats.get(metric)
+            if got is None:
+                fails.append(f"family {fam}: summary lacks {metric!r} "
+                             f"(gated by families.{fam}.{key})")
+            elif got > limit:
+                fails.append(f"family {fam}: {metric} {got:.6g} > limit "
+                             f"{limit:.6g} (families.{fam}.{key})")
     min_scen = thresholds.get("min_scenarios")
     if min_scen is not None and artifact["scenario_count"] < min_scen:
         fails.append(f"scenario_count {artifact['scenario_count']} < "

@@ -8,6 +8,7 @@ Usage:
   python -m repro.sweeps --trace smoke_p8_single_e1_75 --trace-out trace.json
   python -m repro.sweeps --trace worst --trace-from BENCH_sweep.json
   python -m repro.sweeps check BENCH_sweep.json --thresholds ci/sweep_thresholds.json
+  python -m repro.sweeps summary BENCH_sweep.json --out "$GITHUB_STEP_SUMMARY"
 """
 from __future__ import annotations
 
@@ -71,6 +72,14 @@ def build_parser() -> argparse.ArgumentParser:
     # given before the `check` word (argparse parent/subparser collision).
     chk.add_argument("--thresholds", default=argparse.SUPPRESS,
                      help="thresholds JSON to gate against")
+    summ = sub.add_parser("summary", help="render an artifact's summary as "
+                                          "a Markdown table (for "
+                                          "$GITHUB_STEP_SUMMARY)")
+    summ.add_argument("artifact", help="path to BENCH_sweep.json")
+    summ.add_argument("--out", default="-",
+                      help="write/append the Markdown here ('-' = stdout; "
+                           "an existing file is appended to, matching "
+                           "$GITHUB_STEP_SUMMARY semantics)")
     return ap
 
 
@@ -201,11 +210,66 @@ def cmd_check(args: argparse.Namespace) -> int:
     return _gate(art.load_artifact(args.artifact), args.thresholds)
 
 
+def _md(x, fmt: str = "{:.4f}") -> str:
+    return "–" if x is None else fmt.format(x)
+
+
+def format_markdown_summary(artifact_obj: dict) -> str:
+    """Render the artifact's summary block as GitHub-flavored Markdown:
+    overall + per-family overhead percentiles (replay families additionally
+    show the no-replan baseline's percentiles) and, on telemetry artifacts,
+    the per-stage critical-path table."""
+    summary = artifact_obj["summary"]
+    out = [f"### Sweep summary — `{artifact_obj['profile']}` grid, "
+           f"{artifact_obj['scenario_count']} scenarios "
+           f"(`{artifact_obj['schema']}`)", ""]
+    out.append("| group | count | overhead p50 | overhead p99 | "
+               "overhead max | vs-LB p99 | no-replan p99 | gen ms p99 |")
+    out.append("|---|---|---|---|---|---|---|---|")
+    groups = [("**overall**", summary["overall"])]
+    groups += sorted(summary.get("by_family", {}).items())
+    for name, st in groups:
+        out.append(
+            f"| {name} | {st['count']} | {_md(st['overhead_optcc_p50'])} | "
+            f"{_md(st['overhead_optcc_p99'])} | "
+            f"{_md(st['overhead_optcc_max'])} | "
+            f"{_md(st['optcc_vs_lb_p99'])} | "
+            f"{_md(st.get('overhead_noreplan_p99'))} | "
+            f"{_md(st['gen_ms_p99'], '{:.3f}')} |")
+    stages = summary["overall"].get("stages")
+    if stages:
+        out += ["", "#### Critical-path stages (overall)", ""]
+        out.append("| stage | count | overhead p50 | overhead p99 | "
+                   "overhead max |")
+        out.append("|---|---|---|---|---|")
+        for stage, st in sorted(stages.items()):
+            out.append(f"| {stage} | {st['count']} | "
+                       f"{_md(st['overhead_p50'])} | "
+                       f"{_md(st['overhead_p99'])} | "
+                       f"{_md(st['overhead_max'])} |")
+    lat = artifact_obj.get("schedgen_latency_ms")
+    out += ["", f"schedule-gen latency (p=1024, best-of-N): "
+                f"{_md(lat, '{:.3f}')} ms", ""]
+    return "\n".join(out)
+
+
+def cmd_summary(args: argparse.Namespace) -> int:
+    md = format_markdown_summary(art.load_artifact(args.artifact))
+    if args.out == "-":
+        print(md)
+    else:
+        with open(args.out, "a") as f:
+            f.write(md + "\n")
+    return 0
+
+
 def main(argv: list[str] | None = None) -> int:
     args = build_parser().parse_args(argv)
     try:
         if args.cmd == "check":
             return cmd_check(args)
+        if args.cmd == "summary":
+            return cmd_summary(args)
         if args.trace is not None:
             return cmd_trace(args)
         return cmd_run(args)

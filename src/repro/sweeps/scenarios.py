@@ -14,7 +14,12 @@ families:
                 the server through the slow NICs), both NVLink provisionings;
   correlated  - multigpu where the whole server is degraded hard (the
                 "correlated server fault" case: ToR/egress loss hits every
-                NIC on the box at once, ell drawn at the high end).
+                NIC on the box at once, ell drawn at the high end);
+  replay      - time-varying failure timelines (NIC flaps, reroutes,
+                recoveries) replayed through the simulator with mid-flight
+                re-planning, from deterministic trace-shaped generators
+                modeled on the Alibaba-GPU-2020 / AcmeTrace fault catalogs
+                (PAPERS.md) plus miniature checked-in traces in ci/traces/.
 
 Grids are deterministic: the same (profile, seed) always yields the same
 scenario list, which is what makes the sweep artifact reproducible and
@@ -24,6 +29,8 @@ stream, never global randomness.
 from __future__ import annotations
 
 import dataclasses
+import json
+import os
 import random
 from typing import Iterator, Optional, Sequence
 
@@ -40,7 +47,7 @@ class ScenarioSpec:
     hashed, deduplicated, and pickled to worker processes."""
 
     name: str
-    family: str                       # healthy|single|multi|multigpu|correlated
+    family: str           # healthy|single|multi|multigpu|correlated|replay
     p: int
     n: int
     k: int
@@ -49,6 +56,11 @@ class ScenarioSpec:
     nvlink_mult: Optional[float] = None
     fill_bubbles: bool = True
     simulate_ring: bool = True        # also time the degraded ring (ICCL)
+    # Failure timeline as (t, rank, ell) triples; t in units of the
+    # scenario's fault-free optimum T0 so trace files are scale-free (the
+    # engine multiplies by t0_fault_free(p, n, g) at run time). Empty =
+    # static scenario. Tuple-of-tuples keeps the spec hashable.
+    events: tuple[tuple[float, int, float], ...] = ()
 
     def profile(self) -> BandwidthProfile:
         return BandwidthProfile(p=self.p, slowdown=self.slowdown,
@@ -189,6 +201,156 @@ def gen_random_single_multi(count: int, ps: Sequence[int],
 
 
 # ----------------------------------------------------------------------------
+# replay family: time-varying failure timelines
+# ----------------------------------------------------------------------------
+#
+# Event times are in units of the scenario's fault-free optimum T0 (the
+# engine rescales), so the same trace shape is meaningful at every (p, n, k).
+# Shapes are modeled on what the public GPU-cluster fault catalogs show
+# (Alibaba-GPU-2020, AcmeTrace/Kalos; see the R2CCL entry in PAPERS.md):
+# NIC/link flaps that clear within the collective, reroutes that move the
+# congestion to another rank, and mid-collective recoveries of a straggler
+# that was present at launch.
+
+def gen_replay_recovery(ps: Sequence[int], ks: Sequence[int],
+                        ells: Sequence[float] = (2.0, 4.0),
+                        rec_fracs: Sequence[float] = (0.25, 0.5)
+                        ) -> Iterator[ScenarioSpec]:
+    """Straggler present at t=0 recovers mid-collective. The no-replan
+    schedule keeps pacing itself for the vanished straggler (slotted release
+    times), so these are the scenarios where mid-flight re-planning wins."""
+    for p in ps:
+        for k in ks:
+            for ell in ells:
+                for frac in rec_fracs:
+                    yield ScenarioSpec(
+                        name=f"replay_recovery_p{p}_k{k}_l{ell:.3f}_t{frac:g}",
+                        family="replay", p=p, n=_seg_n(p, k), k=k,
+                        slowdown=(1.0,) * p, simulate_ring=False,
+                        events=((0.0, 0, ell), (frac, 0, 1.0)))
+
+
+def gen_replay_flap(ps: Sequence[int], ks: Sequence[int],
+                    ells: Sequence[float] = (2.0, 8 / 3)
+                    ) -> Iterator[ScenarioSpec]:
+    """Healthy launch; one NIC flaps down/up twice mid-collective (the
+    transient-congestion shape OptiReduce attributes the p99 tail to)."""
+    for p in ps:
+        for k in ks:
+            for ell in ells:
+                r = p // 2
+                yield ScenarioSpec(
+                    name=f"replay_flap_p{p}_k{k}_l{ell:.3f}",
+                    family="replay", p=p, n=_seg_n(p, k), k=k,
+                    slowdown=(1.0,) * p, simulate_ring=False,
+                    events=((0.15, r, ell), (0.35, r, 1.0),
+                            (0.55, r, ell), (0.75, r, 1.0)))
+
+
+def gen_replay_reroute(ps: Sequence[int], ks: Sequence[int],
+                       ells: Sequence[float] = (2.0,)
+                       ) -> Iterator[ScenarioSpec]:
+    """Congestion moves: the launch straggler clears but the rerouted
+    traffic degrades a different rank at the same instant."""
+    for p in ps:
+        for k in ks:
+            for ell in ells:
+                b = p // 2
+                yield ScenarioSpec(
+                    name=f"replay_reroute_p{p}_k{k}_l{ell:.3f}",
+                    family="replay", p=p, n=_seg_n(p, k), k=k,
+                    slowdown=(1.0,) * p, simulate_ring=False,
+                    events=((0.0, 0, ell), (0.4, 0, 1.0), (0.4, b, ell)))
+
+
+def gen_replay_const(ps: Sequence[int], ks: Sequence[int],
+                     ells: Sequence[float] = (2.0,)
+                     ) -> Iterator[ScenarioSpec]:
+    """Constant timelines: the only event is at t=0, so the replay must be
+    IEEE-754-identical to its static single-straggler twin (same p/n/k,
+    straggler at rank 0) - tests/test_replay.py pins exactly that against
+    the artifact."""
+    for p in ps:
+        for k in ks:
+            for ell in ells:
+                yield ScenarioSpec(
+                    name=f"replay_const_p{p}_k{k}_l{ell:.3f}",
+                    family="replay", p=p, n=_seg_n(p, k), k=k,
+                    slowdown=(1.0,) * p, simulate_ring=False,
+                    events=((0.0, 0, ell),))
+
+
+# Checked-in miniature traces (ci/traces/*.json). Times in T0 units, ranks
+# taken modulo p at expansion time. Resolution order: $REPRO_TRACES_DIR,
+# then the repo-relative ci/traces next to the src/ layout.
+_REPO_TRACES = os.path.normpath(os.path.join(
+    os.path.dirname(__file__), "..", "..", "..", "ci", "traces"))
+
+
+def traces_dir() -> str:
+    return os.environ.get("REPRO_TRACES_DIR", _REPO_TRACES)
+
+
+def load_trace(path: str) -> dict:
+    """Load + validate one trace file: {"name", "events": [[t, rank, ell]...],
+    optional "description"/"source"}. Raises ValueError on malformed files -
+    a trace that silently loads as empty would weaken the CI gate."""
+    with open(path) as f:
+        obj = json.load(f)
+    name = obj.get("name")
+    events = obj.get("events")
+    if not isinstance(name, str) or not name:
+        raise ValueError(f"{path}: trace needs a non-empty string 'name'")
+    if not isinstance(events, list) or not events:
+        raise ValueError(f"{path}: trace needs a non-empty 'events' list")
+    for i, e in enumerate(events):
+        if (not isinstance(e, list) or len(e) != 3
+                or not all(isinstance(x, (int, float)) for x in e)):
+            raise ValueError(f"{path}: events[{i}] must be [t, rank, ell]")
+        t, rank, ell = e
+        if t < 0 or ell < 1.0 or int(rank) != rank or rank < 0:
+            raise ValueError(f"{path}: events[{i}] out of range: {e}")
+    return obj
+
+
+def gen_replay_traces(ps: Sequence[int], ks: Sequence[int],
+                      directory: Optional[str] = None
+                      ) -> Iterator[ScenarioSpec]:
+    """One scenario per (checked-in trace, p, k). Missing directory yields
+    nothing (the grid stays valid outside a repo checkout); malformed trace
+    files raise."""
+    d = traces_dir() if directory is None else directory
+    if not os.path.isdir(d):
+        return
+    for fname in sorted(os.listdir(d)):
+        if not fname.endswith(".json"):
+            continue
+        tr = load_trace(os.path.join(d, fname))
+        for p in ps:
+            for k in ks:
+                events = tuple((float(t), int(rank) % p, float(ell))
+                               for t, rank, ell in tr["events"])
+                yield ScenarioSpec(
+                    name=f"replay_trace_{tr['name']}_p{p}_k{k}",
+                    family="replay", p=p, n=_seg_n(p, k), k=k,
+                    slowdown=(1.0,) * p, simulate_ring=False,
+                    events=events)
+
+
+def gen_replay(ps: Sequence[int], ks: Sequence[int],
+               ells: Sequence[float] = (2.0, 4.0)) -> list[ScenarioSpec]:
+    """The whole replay family for a (ps, ks) block: generator shapes plus
+    every checked-in trace."""
+    specs: list[ScenarioSpec] = []
+    specs += gen_replay_recovery(ps, ks, ells=ells)
+    specs += gen_replay_flap(ps, ks)
+    specs += gen_replay_reroute(ps, ks)
+    specs += gen_replay_const(ps, ks)
+    specs += gen_replay_traces(ps, ks)
+    return specs
+
+
+# ----------------------------------------------------------------------------
 # named grids
 # ----------------------------------------------------------------------------
 
@@ -213,6 +375,7 @@ def smoke_grid(seed: int = 0) -> list[ScenarioSpec]:
                           family="correlated")
     specs += gen_random_single_multi(count=96, ps=(8, 12, 16), ks=(16,),
                                      rng=rng)
+    specs += gen_replay(ps=(8, 16), ks=(12,))
     return _dedup(specs)
 
 
@@ -245,6 +408,8 @@ def full_grid(seed: int = 0) -> list[ScenarioSpec]:
                           family="correlated")
     specs += gen_random_single_multi(count=400, ps=(8, 16, 32), ks=(4, 16),
                                      rng=rng)
+    specs += gen_replay(ps=(8, 16, 32), ks=(4, 16),
+                        ells=(8 / 7, 2.0, 8 / 3, 4.0))
     return _dedup(specs)
 
 
@@ -256,7 +421,7 @@ def _dedup(specs: Sequence[ScenarioSpec]) -> list[ScenarioSpec]:
     out = []
     for s in specs:
         key = (s.p, s.n, s.k, s.slowdown, s.gpus_per_server, s.nvlink_mult,
-               s.fill_bubbles)
+               s.fill_bubbles, s.events)
         if key in seen:
             continue
         seen.add(key)

@@ -1,0 +1,183 @@
+"""Time-varying fault replay: FaultTimeline semantics, the three simulator
+paths' bit-equality under timelines, the mid-flight re-planning controller,
+and the replay scenario family's artifact contract."""
+import math
+import os
+
+import pytest
+
+from repro.core import lower_bounds as lb
+from repro.core.model import BandwidthProfile, FaultTimeline
+from repro.core.planner import make_plan, replay
+from repro.core.simulator import simulate, simulate_reference
+from repro.sweeps import build_artifact, run_scenario, validate_artifact
+from repro.sweeps.scenarios import (ScenarioSpec, load_trace, smoke_grid,
+                                    traces_dir)
+
+P, N, K = 8, 1920, 12
+ELL = 4.0
+
+
+def _recovery_timeline(t_rec: float, ell: float = ELL) -> FaultTimeline:
+    return FaultTimeline.make([(0.0, 0, ell), (t_rec, 0, 1.0)])
+
+
+# ----------------------------------------------------------------------------
+# FaultTimeline semantics
+# ----------------------------------------------------------------------------
+
+def test_timeline_is_deterministic_and_sorted():
+    ev = [(50.0, 1, 2.0), (10.0, 0, 4.0), (50.0, 0, 1.0)]
+    a = FaultTimeline.make(ev)
+    b = FaultTimeline.make(list(reversed(ev)))
+    assert a == b
+    assert [e.t for e in a.events] == sorted(e.t for e in a.events)
+
+
+def test_timeline_profile_at_folds_events():
+    prof = BandwidthProfile.healthy(P)
+    tl = _recovery_timeline(100.0)
+    assert tl.profile_at(prof, 0.0).slowdown[0] == ELL
+    assert tl.profile_at(prof, 99.9).slowdown[0] == ELL
+    assert tl.profile_at(prof, 100.0).slowdown[0] == 1.0
+
+
+def test_constant_timeline_has_no_breakpoints():
+    prof = BandwidthProfile.single_straggler(P, ELL)
+    tl = FaultTimeline.make([(0.0, 0, ELL)])
+    breaks, _ = tl.after(0.0).segments(prof)
+    assert list(breaks) == []
+
+
+# ----------------------------------------------------------------------------
+# simulator paths under timelines
+# ----------------------------------------------------------------------------
+
+def test_constant_timeline_reproduces_static_bit_exactly():
+    """A timeline that never changes anything must leave the simulation on
+    the static code path: IEEE-754-identical flow times, not just close."""
+    prof = BandwidthProfile.single_straggler(P, ELL)
+    plan = make_plan(prof, N, k=K)
+    tl = FaultTimeline.make([(0.0, 0, ELL)]).after(0.0)
+    static = simulate(plan.schedule)
+    timed = simulate(plan.schedule, timeline=tl)
+    assert timed.makespan == static.makespan
+    assert timed.finish == static.finish
+    assert timed.start == static.start
+
+
+def test_vec_scalar_greedy_agree_under_timeline():
+    """The segmented max-plus pass, the greedy event loop, and the reference
+    event loop must produce bit-identical flow times under a mid-flight
+    rate change (the vec_exact contract extended to timelines)."""
+    prof = BandwidthProfile.single_straggler(P, 2.0)
+    plan = make_plan(prof, N, k=K)
+    assert plan.schedule.meta.get("vec_exact")
+    scale = lb.t0_fault_free(P, N, 1)
+    tl = FaultTimeline.make([(0.35 * scale, 0, 1.0),
+                             (0.6 * scale, 3, 1.7)])
+    fast = simulate(plan.schedule, timeline=tl)
+    ref = simulate_reference(plan.schedule, timeline=tl)
+    assert fast.makespan == ref.makespan
+    assert fast.finish == ref.finish
+    assert fast.start == ref.start
+
+
+def test_recovery_at_zero_equals_healthy():
+    """An event that 'recovers' a rank at t=0 is just a healthy profile."""
+    prof = BandwidthProfile.single_straggler(P, ELL)
+    tl = FaultTimeline.make([(0.0, 0, 1.0)])
+    base = tl.profile_at(prof, 0.0)
+    assert base.slowdown == BandwidthProfile.healthy(P).slowdown
+    rr = replay(prof, N, tl, k=K)
+    healthy_plan = make_plan(BandwidthProfile.healthy(P), N, k=K)
+    assert rr.t_noreplan == simulate(healthy_plan.schedule).makespan
+    assert rr.t_replan == rr.t_noreplan
+    assert rr.replans == 0
+
+
+# ----------------------------------------------------------------------------
+# re-planning controller
+# ----------------------------------------------------------------------------
+
+def test_replan_never_worse_than_noreplan():
+    prof = BandwidthProfile.single_straggler(P, ELL)
+    scale = lb.t0_fault_free(P, N, 1)
+    for frac in (0.15, 0.3, 0.5, 0.75):
+        rr = replay(prof, N, _recovery_timeline(frac * scale), k=K)
+        assert rr.t_replan <= rr.t_noreplan + 1e-9
+        assert rr.t_replan >= rr.lower_bound * (1 - 1e-9)
+
+
+def test_replan_strictly_wins_on_recovery():
+    """Mid-flight recovery is where re-planning pays: the no-replan schedule
+    keeps pacing itself for the departed straggler."""
+    prof = BandwidthProfile.single_straggler(P, ELL)
+    scale = lb.t0_fault_free(P, N, 1)
+    rr = replay(prof, N, _recovery_timeline(0.35 * scale), k=K)
+    assert rr.adopted_replan
+    assert rr.t_replan < rr.t_noreplan
+    assert rr.replans >= 1
+
+
+def test_replay_checked_in_recovery_trace_strictly_wins():
+    """Acceptance criterion: on the checked-in recovery trace, re-planning
+    strictly beats riding the original schedule."""
+    tr = load_trace(os.path.join(traces_dir(), "straggler_recovery.json"))
+    events = tuple((float(t), int(r) % P, float(ell))
+                   for t, r, ell in tr["events"])
+    spec = ScenarioSpec(name="t", family="replay", p=P, n=N, k=K,
+                        slowdown=(1.0,) * P,
+                        simulate_ring=False, events=events)
+    res = run_scenario(spec, measure_latency=False)
+    assert res.t_optcc < res.t_noreplan
+
+
+def test_load_trace_rejects_malformed(tmp_path):
+    bad = tmp_path / "bad.json"
+    bad.write_text('{"name": "x", "events": [[0.0, 0]]}')
+    with pytest.raises(ValueError):
+        load_trace(str(bad))
+
+
+# ----------------------------------------------------------------------------
+# scenario family + artifact contract
+# ----------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def replay_results():
+    specs = [s for s in smoke_grid(seed=0) if s.events]
+    assert specs, "smoke grid lost its replay family"
+    return [run_scenario(s, measure_latency=False, telemetry=True)
+            for s in specs[::3]]
+
+
+def test_replay_rows_validate(replay_results):
+    art = build_artifact(replay_results, profile="replay/3", seed=0,
+                         deterministic=True, telemetry=True)
+    assert validate_artifact(art) == []
+    for rec in art["scenarios"]:
+        assert rec["family"] == "replay"
+        assert rec["events"]
+        assert rec["t_optcc"] <= rec["t_noreplan"] * (1 + 1e-9)
+        # stage attribution covers the whole no-replan run
+        total = sum(rec["stage_breakdown"].values())
+        assert math.isclose(total, rec["t_noreplan"], rel_tol=1e-6)
+
+
+def test_replay_const_twin_is_bit_identical():
+    """Acceptance criterion: the constant-timeline replay scenario equals
+    its static-profile twin IEEE-754-exactly."""
+    grid = smoke_grid(seed=0)
+    const = [s for s in grid if s.events and "const" in s.name]
+    assert const
+    for spec in const:
+        ell = spec.events[0][2]
+        twin = next(s for s in grid
+                    if not s.events and s.p == spec.p and s.k == spec.k
+                    and s.n == spec.n and s.stragglers == (0,)
+                    and s.slowdown[0] == ell)
+        r_replay = run_scenario(spec, measure_latency=False)
+        r_static = run_scenario(twin, measure_latency=False)
+        assert r_replay.t_noreplan == r_static.t_optcc
+        assert r_replay.t_optcc == r_static.t_optcc

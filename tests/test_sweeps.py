@@ -45,8 +45,10 @@ def test_smoke_grid_size_and_diversity():
     assert len(specs) >= 200
     fams = {s.family for s in specs}
     assert {"healthy", "single", "multi", "multigpu", "correlated"} <= fams
-    # Distinct scenarios: no two specs share the same physical setup.
-    keys = {(s.p, s.n, s.k, s.slowdown, s.gpus_per_server, s.nvlink_mult)
+    # Distinct scenarios: no two specs share the same physical setup
+    # (replay specs differ by their failure timeline too).
+    keys = {(s.p, s.n, s.k, s.slowdown, s.gpus_per_server, s.nvlink_mult,
+             s.events)
             for s in specs}
     assert len(keys) == len(specs)
     # The nightly grid keeps every family too (dedup must not fold the
