@@ -63,6 +63,33 @@ class FailureInjector:
             ev[repair_step] = FaultState(axis_size)
         return cls(axis_size, ev)
 
+    def to_timeline(self, t_per_step: float, base: Optional[FaultState] = None):
+        """Bridge to the simulator's `FaultTimeline`: the step-indexed
+        injection schedule as per-rank SET events at ``step * t_per_step``
+        element-time.
+
+        The injector's schedule is a sequence of whole-cluster states; the
+        timeline wants per-rank deltas, so consecutive states are diffed and
+        only ranks whose slowdown actually changes emit events (a repair
+        emits the explicit return to 1.0). `base` is the state before the
+        first event (default: healthy). The result plugs straight into
+        `planner.replay` / `detect.estimate_timeline`, letting one injection
+        schedule drive both the runtime path and the what-if simulation.
+        """
+        from repro.core.model import FaultTimeline
+        if t_per_step <= 0:
+            raise ValueError("t_per_step must be > 0")
+        cur = (base if base is not None
+               else FaultState(self.axis_size)).profile().slowdown
+        triples: list[tuple[float, int, float]] = []
+        for step in sorted(self.events):
+            nxt = self.events[step].profile().slowdown
+            for r, (a, b) in enumerate(zip(cur, nxt)):
+                if a != b:
+                    triples.append((step * t_per_step, r, b))
+            cur = nxt
+        return FaultTimeline.make(triples)
+
 
 class FaultAwareSync:
     """Callable gradient-sync selector used by train.step factories.

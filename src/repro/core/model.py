@@ -295,6 +295,24 @@ class FaultTimeline:
             FaultEvent(e.t - t0, e.rank, e.ell)
             for e in self.events if e.t > t0))
 
+    def changes(self, profile: "BandwidthProfile"
+                ) -> dict[int, list[tuple[float, float]]]:
+        """Per-rank effective value changes after t=0, resolved against the
+        base profile: {rank: [(t, new_ell), ...]} with strictly increasing
+        t per rank. No-op events are dropped (same semantics as `segments`);
+        ranks that never change are absent. This is the per-rank view the
+        fault-detection layer (`repro.detect`) samples through its probe
+        lens, and what `comms.fault.FailureInjector.to_timeline` round-trips
+        through in tests."""
+        breaks, vectors = self.segments(profile)
+        out: dict[int, list[tuple[float, float]]] = {}
+        for j, t in enumerate(breaks):
+            prev, cur = vectors[j], vectors[j + 1]
+            for r in range(profile.p):
+                if cur[r] != prev[r]:
+                    out.setdefault(r, []).append((t, cur[r]))
+        return out
+
     def min_profile(self, profile: "BandwidthProfile") -> "BandwidthProfile":
         """Per-rank best-ever rates over the whole timeline: the static
         profile in which every NIC always runs at the fastest rate it ever

@@ -106,7 +106,8 @@ def plan_descriptor(profile: BandwidthProfile, n: int, k: int) -> dict:
 
 def make_plan(profile: BandwidthProfile, n: int, k: int = 16,
               fill_bubbles: bool = True,
-              materialize: bool | str = True) -> Plan:
+              materialize: bool | str = True,
+              force_ring: bool = False) -> Plan:
     """materialize=True -> Flow-object schedule (executor-ready);
     materialize="arrays" -> columnar schedule (simulator hot path; same
     flow graph, no Flow objects); materialize=False -> descriptor only.
@@ -117,17 +118,29 @@ def make_plan(profile: BandwidthProfile, n: int, k: int = 16,
     fill would cost more - small p, shallow k, l close to 1 - staying on
     the ring is the right call, and the calibrated optcc_time (within 10%
     of the simulator, tests/test_schedule_time.py) makes this comparison
-    trustworthy at planning time."""
+    trustworthy at planning time.
+
+    force_ring=True skips the OptCC comparison entirely and plans the FIFO
+    ring for the profile - the mis-plan fallback `replay` takes when a
+    fault detector's estimate is not credible enough to pick a straggler
+    set from (`repro.detect.estimate_usable`). The ring is valid under any
+    profile, including ones OptCC's closed form would degenerate on (e.g.
+    an estimate claiming p-1 stragglers)."""
     t_start = time.perf_counter()
     g = profile.gpus_per_server
     ells = [l for l in profile.slowdown if l > 1.0]
     # De-duplicate per-server slowdowns in the multi-GPU case.
     if g > 1 and ells:
         ells = [max(ells)]
-    optcc_pred = lb.optcc_time(profile.p, n, ells, k, g)
     ring_pred = max(profile.slowdown) * lb.t0_fault_free(profile.p, n, 1)
-    use_ring = ring_pred <= optcc_pred      # healthy profiles tie -> ring
-    descriptor = plan_descriptor(profile, n, k)
+    if force_ring:
+        optcc_pred = ring_pred
+        use_ring = True
+        descriptor = {"algo": "ring", "k": k}
+    else:
+        optcc_pred = lb.optcc_time(profile.p, n, ells, k, g)
+        use_ring = ring_pred <= optcc_pred  # healthy profiles tie -> ring
+        descriptor = plan_descriptor(profile, n, k)
     if use_ring:
         descriptor["algo"] = "ring"
     if materialize == "arrays":
@@ -189,6 +202,13 @@ class ReplayResult:
     # so callers can attribute t_noreplan per stage (repro.obs) without
     # re-simulating.
     noreplan_result: object = None
+    # Imperfect-detection fields (repro.detect). policy="oracle" marks the
+    # PR-8 zero-delay perfect-knowledge controller (detector=None).
+    policy: str = "oracle"
+    detector: object = None        # detect.DetectorConfig | None
+    detection: object = None       # detect.DetectionResult | None
+    false_replans: int = 0         # splices with no true rate change behind
+    suppressed: int = 0            # estimated changes the policy swallowed
 
     @property
     def t_replan(self) -> float:
@@ -199,10 +219,20 @@ class ReplayResult:
     def adopted_replan(self) -> bool:
         return self.t_chain < self.t_noreplan
 
+    @property
+    def detect_lag_mean(self) -> float | None:
+        return None if self.detection is None else self.detection.lag_mean
+
+    @property
+    def detect_lag_max(self) -> float | None:
+        return None if self.detection is None else self.detection.lag_max
+
 
 def replay(profile: BandwidthProfile, n: int, timeline: FaultTimeline,
            k: int = 16, fill_bubbles: bool = True,
-           max_replans: int = 8) -> ReplayResult:
+           max_replans: int = 8,
+           detector: object = None,
+           controller: object = None) -> ReplayResult:
     """Run one AllReduce under a failure timeline, re-planning mid-flight.
 
     The no-replan baseline simulates the initial plan (built for the
@@ -219,16 +249,32 @@ def replay(profile: BandwidthProfile, n: int, timeline: FaultTimeline,
         profile in force at the drain time, and the residual timeline
         (later events, shifted to the new plan's clock) recurses.
 
-    The chain is an idealized controller (zero detection and generation
-    latency - `make_plan` is < 1 ms against multi-second collectives, so
-    the approximation is tight) and the adopted result is
-    ``min(chain, no-replan)``: see `ReplayResult`.
+    With ``detector=None`` (the default) the controller is the PR-8
+    *oracle*: zero detection latency, perfect knowledge of the new rates.
+    The adopted result is ``min(chain, no-replan)``: see `ReplayResult`.
+
+    With a `repro.detect.DetectorConfig`, the controller reacts to the
+    *estimated* timeline instead: triggers are the breakpoints of the
+    detector's estimate (lagged, noisy, possibly spurious), filtered by the
+    `repro.detect.ControllerConfig` policy (``immediate`` / ``debounce`` /
+    ``backoff``), and every spliced plan is built from the estimated
+    profile at the drain time. Execution stays truth-grounded - mis-plan
+    tolerance: the (possibly wrong) schedule is simulated under the *true*
+    rates by folding per-rank truth corrections into the simulation
+    timeline at t=0, so a plan built for the wrong straggler or wrong ell
+    still yields a valid, correctly-timed run; when the estimate is not
+    credible enough to pick a straggler set from
+    (`repro.detect.estimate_usable`) the splice falls back to the degraded
+    FIFO ring. A perfect detector with the ``immediate`` policy reproduces
+    the oracle bit-for-bit (tests/test_detect.py pins this on every
+    checked-in ci/traces file).
 
     The strict wins come from slotted OptCC's release times: they are
     computed for the *degraded* rates, so after a recovery the no-replan
     schedule still paces itself as if the straggler were there, while the
     replanned remainder runs at full speed.
     """
+    from repro.core.model import FaultEvent
     from repro.core.simulator import simulate
 
     if max_replans < 0:
@@ -239,17 +285,57 @@ def replay(profile: BandwidthProfile, n: int, timeline: FaultTimeline,
     res0 = simulate(plan0.schedule, timeline=tl0)
     t_noreplan = res0.makespan
 
-    # Replanned chain: walk breakpoints, splicing a fresh plan at each.
+    detection = None
+    suppressed = 0
+    ctrl = None
+    est_tl0 = tl0
+    if detector is not None:
+        from repro.detect import (ControllerConfig, apply_policy,
+                                  estimate_timeline)
+        ctrl = controller if controller is not None else ControllerConfig()
+        # The horizon must cover everything the chain could react to: the
+        # no-replan makespan, the last true event, plus the detector's own
+        # lag sources (sensing latency, debounce window, a couple probes).
+        last_ev = max((e.t for e in tl0.events), default=0.0)
+        dt = detector.probe_interval
+        window = (ctrl.debounce_probes - 1) * dt \
+            if ctrl.policy == "debounce" else 0.0
+        horizon = max(t_noreplan, last_ev) + detector.latency + window \
+            + 2.0 * dt
+        detection = estimate_timeline(base, tl0, horizon, detector)
+        est_tl0, suppressed = apply_policy(detection, base, ctrl)
+    elif controller is not None:
+        raise ValueError("a controller policy needs a detector "
+                         "(detector=None runs the zero-delay oracle)")
+
+    # Replanned chain: walk trigger breakpoints, splicing a fresh plan at
+    # each. Triggers and plan profiles come from the estimated view
+    # (== the truth in oracle mode); drains and simulations from the truth.
     t_off = 0.0
     n_cur = float(n)
     prof_cur = base
     tl_cur = tl0
+    est_prof_cur = base
+    est_tl_cur = est_tl0
     plan_cur, res_cur = plan0, res0
     replans = 0
+    false_replans = 0
+    not_before = 0.0               # backoff floor, absolute chain time
     t_chain = t_noreplan
     while True:
-        breaks, _ = tl_cur.segments(prof_cur)
+        if detector is None:
+            breaks, _ = tl_cur.segments(prof_cur)
+        else:
+            breaks, _ = est_tl_cur.segments(est_prof_cur)
         b = next((bt for bt in breaks if bt < res_cur.makespan), None)
+        if b is not None and ctrl is not None and ctrl.policy == "backoff" \
+                and t_off + b < not_before:
+            # Defer (and thereby coalesce) triggers inside the spacing
+            # floor; a floor beyond the current run's makespan ends the
+            # chain - the remaining estimated changes go unanswered.
+            b = not_before - t_off
+            if b >= res_cur.makespan:
+                b = None
         if b is None or replans >= max_replans:
             t_chain = t_off + res_cur.makespan
             break
@@ -268,13 +354,43 @@ def replay(profile: BandwidthProfile, n: int, timeline: FaultTimeline,
         # Drain: in-flight flows keep their ports until done, so their
         # finishes in res_cur are exact regardless of the cancellations.
         t_d = max([b] + [finishes[f.fid] for f in started])
+        prev_true = prof_cur
         prof_cur = tl_cur.profile_at(prof_cur, t_d)
         tl_cur = tl_cur.after(t_d)
+        if detector is None:
+            est_prof_cur, est_tl_cur = prof_cur, tl_cur
+        else:
+            est_prof_cur = est_tl_cur.profile_at(est_prof_cur, t_d)
+            est_tl_cur = est_tl_cur.after(t_d)
         t_off += t_d
         n_cur = float(n_rem)
         replans += 1
-        plan_cur = make_plan(prof_cur, n_rem, k, fill_bubbles)
-        res_cur = simulate(plan_cur.schedule, timeline=tl_cur)
+        if detector is not None \
+                and prof_cur.slowdown == prev_true.slowdown:
+            # The trigger had no true rate change behind it (an FP blip, or
+            # a flap that cleared before the drain finished): pure thrash.
+            false_replans += 1
+        if detector is None:
+            plan_cur = make_plan(prof_cur, n_rem, k, fill_bubbles)
+            sim_tl = tl_cur
+        else:
+            from repro.detect import estimate_usable
+            plan_cur = make_plan(est_prof_cur, n_rem, k, fill_bubbles,
+                                 force_ring=not estimate_usable(est_prof_cur))
+            # Mis-plan execution: the schedule was built for the estimated
+            # rates, but the wire runs at the true ones. Events SET
+            # absolute per-rank values, so t=0 corrections re-ground the
+            # simulation in the truth regardless of the plan's beliefs.
+            corr = tuple(
+                FaultEvent(0.0, r, tv)
+                for r, (tv, ev) in enumerate(zip(prof_cur.slowdown,
+                                                 est_prof_cur.slowdown))
+                if tv != ev)
+            sim_tl = FaultTimeline(corr + tl_cur.events) if corr else tl_cur
+        res_cur = simulate(plan_cur.schedule, timeline=sim_tl)
+        if ctrl is not None and ctrl.policy == "backoff":
+            not_before = t_off + ctrl.backoff_spacing(
+                detector.probe_interval, replans)
 
     return ReplayResult(
         profile=base,
@@ -287,4 +403,9 @@ def replay(profile: BandwidthProfile, n: int, timeline: FaultTimeline,
         t0=lb.t0_fault_free(base.p, n, base.gpus_per_server),
         plan0=plan0,
         noreplan_result=res0,
+        policy="oracle" if detector is None else ctrl.policy,
+        detector=detector,
+        detection=detection,
+        false_replans=false_replans,
+        suppressed=suppressed,
     )

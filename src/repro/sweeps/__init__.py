@@ -20,14 +20,14 @@ from repro.sweeps.artifact import (SCHEMA, THRESHOLDS_SCHEMA, build_artifact,
 from repro.sweeps.engine import (ScenarioResult, grid_for, run_scenario,
                                  run_sweep, sanity_check)
 from repro.sweeps.scenarios import (GRIDS, PAPER_ELLS, ScenarioSpec,
-                                    full_grid, gen_replay, load_trace,
-                                    smoke_grid, traces_dir)
+                                    full_grid, gen_detection, gen_replay,
+                                    load_trace, smoke_grid, traces_dir)
 from repro.sweeps.stats import percentile, percentile_or_none, summarize
 
 __all__ = [
     "ScenarioSpec", "ScenarioResult", "GRIDS", "PAPER_ELLS",
     "smoke_grid", "full_grid", "grid_for",
-    "gen_replay", "load_trace", "traces_dir",
+    "gen_detection", "gen_replay", "load_trace", "traces_dir",
     "run_scenario", "run_sweep", "sanity_check",
     "SCHEMA", "THRESHOLDS_SCHEMA",
     "build_artifact", "canonical_bytes", "validate_artifact",

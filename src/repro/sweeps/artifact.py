@@ -34,6 +34,22 @@ optcc-sweep/3 (vs /2):
   * thresholds gain a ``families`` block ({family: {metric_max: limit,
     min_scenarios: N}}); a gated family missing from the artifact fails
     loudly (a grid regression must not silently pass).
+
+optcc-sweep/4 (vs /3):
+  * detection-family scenarios (imperfect detector + controller policy over
+    a replay timeline) carry every replay field plus ``policy``,
+    ``detection`` (the detector/controller parameters, times in T0 units),
+    ``t_oracle`` / ``overhead_vs_oracle`` (the same timeline under the PR-8
+    zero-delay perfect-knowledge controller - the denominator that prices
+    detection imperfection), ``false_replans``, ``suppressed``,
+    ``detect_lag_mean`` / ``detect_lag_max`` (null when nothing was
+    detected) and ``detect_missed``;
+  * summary groups containing detection scenarios add
+    ``overhead_vs_oracle_p50/p99/max`` and ``false_replans_total``, and the
+    summary block gains ``by_policy`` (detection records grouped by
+    controller policy);
+  * top-level ``retries`` records how many worker chunks the sweep engine
+    had to re-run after a crash/hang (null = unknown, from older artifacts).
 """
 from __future__ import annotations
 
@@ -47,7 +63,7 @@ __all__ = ["SCHEMA", "THRESHOLDS_SCHEMA", "percentile", "scenario_record",
            "build_artifact", "canonical_bytes", "write_artifact",
            "load_artifact", "validate_artifact", "check_thresholds"]
 
-SCHEMA = "optcc-sweep/3"
+SCHEMA = "optcc-sweep/4"
 THRESHOLDS_SCHEMA = "optcc-sweep-thresholds/1"
 
 _SCENARIO_REQUIRED = {
@@ -110,6 +126,19 @@ def scenario_record(r: ScenarioResult, deterministic: bool = False) -> dict:
         rec["replans"] = r.replans
         rec["events"] = [[_round(t), rank, _round(ell)]
                          for t, rank, ell in s.events]
+    if r.policy is not None:
+        # Detection family: the replay fields above scored the *imperfect*
+        # controller; these add the lens parameters and the oracle yardstick.
+        rec["policy"] = r.policy
+        rec["detection"] = {key: (_round(v) if isinstance(v, float) else v)
+                            for key, v in s.detection}
+        rec["t_oracle"] = _round(r.t_oracle)
+        rec["overhead_vs_oracle"] = _round(r.overhead_vs_oracle)
+        rec["false_replans"] = r.false_replans
+        rec["suppressed"] = r.suppressed
+        rec["detect_lag_mean"] = _round(r.detect_lag_mean)
+        rec["detect_lag_max"] = _round(r.detect_lag_max)
+        rec["detect_missed"] = r.detect_missed
     if r.stage_breakdown is not None:
         rec["stage_breakdown"] = {st: _round(v)
                                   for st, v in sorted(r.stage_breakdown.items())}
@@ -153,6 +182,14 @@ def _summarize(records: Sequence[dict], telemetry: bool = False) -> dict:
         out["overhead_noreplan_p50"] = _round(percentile(rep, 50))
         out["overhead_noreplan_p99"] = _round(percentile(rep, 99))
         out["overhead_noreplan_max"] = _round(max(rep))
+    orc = [r["overhead_vs_oracle"] for r in records
+           if "overhead_vs_oracle" in r]
+    if orc:
+        out["overhead_vs_oracle_p50"] = _round(percentile(orc, 50))
+        out["overhead_vs_oracle_p99"] = _round(percentile(orc, 99))
+        out["overhead_vs_oracle_max"] = _round(max(orc))
+        out["false_replans_total"] = sum(r["false_replans"] for r in records
+                                         if "false_replans" in r)
     if telemetry:
         out["stages"] = _stage_summary(records)
     return out
@@ -161,10 +198,26 @@ def _summarize(records: Sequence[dict], telemetry: bool = False) -> dict:
 def build_artifact(results: Sequence[ScenarioResult], profile: str,
                    seed: int, deterministic: bool,
                    schedgen_latency_ms: Optional[float] = None,
-                   telemetry: bool = False) -> dict:
+                   telemetry: bool = False,
+                   retries: int = 0) -> dict:
     records = [scenario_record(r, deterministic=deterministic)
                for r in results]
     families = sorted({r["family"] for r in records})
+    policies = sorted({r["policy"] for r in records if "policy" in r})
+    summary = {
+        "overall": _summarize(records, telemetry),
+        "by_family": {
+            fam: _summarize([r for r in records if r["family"] == fam],
+                            telemetry)
+            for fam in families
+        },
+    }
+    if policies:
+        summary["by_policy"] = {
+            pol: _summarize([r for r in records if r.get("policy") == pol],
+                            telemetry)
+            for pol in policies
+        }
     return {
         "schema": SCHEMA,
         "profile": profile,
@@ -176,14 +229,11 @@ def build_artifact(results: Sequence[ScenarioResult], profile: str,
         # measurements are excluded so artifacts stay byte-identical.
         "schedgen_latency_ms": _round(schedgen_latency_ms, 6),
         "scenario_count": len(records),
-        "summary": {
-            "overall": _summarize(records, telemetry),
-            "by_family": {
-                fam: _summarize([r for r in records if r["family"] == fam],
-                                telemetry)
-                for fam in families
-            },
-        },
+        # Worker chunks the engine re-ran after a crash/hang; deterministic
+        # per grid only in the common 0 case, but retries don't perturb
+        # scenario bytes (results are pure functions of specs either way).
+        "retries": retries,
+        "summary": summary,
         "scenarios": records,
     }
 
@@ -223,7 +273,16 @@ def _migrate_v1(obj: dict) -> dict:
 def _migrate_v2(obj: dict) -> dict:
     """optcc-sweep/2 -> /3: purely additive (replay fields are optional and
     a v2 artifact simply predates the replay family), so only the tag moves."""
+    obj["schema"] = "optcc-sweep/3"
+    return obj
+
+
+def _migrate_v3(obj: dict) -> dict:
+    """optcc-sweep/3 -> /4: detection fields are additive (a v3 artifact
+    predates the detection family), but the engine's retry count was not
+    recorded - null marks it unknown rather than claiming a clean 0."""
     obj["schema"] = SCHEMA
+    obj["retries"] = None
     return obj
 
 
@@ -237,6 +296,8 @@ def load_artifact(path: str) -> dict:
         obj = _migrate_v1(obj)
     if obj.get("schema") == "optcc-sweep/2":
         obj = _migrate_v2(obj)
+    if obj.get("schema") == "optcc-sweep/3":
+        obj = _migrate_v3(obj)
     return obj
 
 
@@ -287,16 +348,17 @@ def validate_artifact(artifact: dict) -> list[str]:
             errs.append(f"{rec['name']}: t_optcc beats the lower bound")
         if rec["overhead_lb"] > rec["overhead_optcc"] * (1 + 1e-9):
             errs.append(f"{rec['name']}: overhead_lb > overhead_optcc")
-        if rec["family"] == "replay":
+        if rec["family"] in ("replay", "detection"):
+            fam = rec["family"]
             if not isinstance(rec.get("t_noreplan"), (int, float)):
-                errs.append(f"{rec['name']}: replay scenario lacks "
+                errs.append(f"{rec['name']}: {fam} scenario lacks "
                             f"t_noreplan")
             elif not isinstance(rec.get("replans"), int) \
                     or rec["replans"] < 0:
-                errs.append(f"{rec['name']}: replay scenario needs a "
+                errs.append(f"{rec['name']}: {fam} scenario needs a "
                             f"non-negative int 'replans'")
             elif not isinstance(rec.get("events"), list) or not rec["events"]:
-                errs.append(f"{rec['name']}: replay scenario lacks its "
+                errs.append(f"{rec['name']}: {fam} scenario lacks its "
                             f"'events' timeline")
             elif rec["t_optcc"] > rec["t_noreplan"] * (1 + 1e-9):
                 errs.append(f"{rec['name']}: adopted t_optcc exceeds the "
@@ -305,6 +367,32 @@ def validate_artifact(artifact: dict) -> list[str]:
         elif "t_noreplan" in rec:
             errs.append(f"{rec['name']}: t_noreplan on a non-replay "
                         f"scenario")
+        if rec["family"] == "detection":
+            if not isinstance(rec.get("policy"), str):
+                errs.append(f"{rec['name']}: detection scenario lacks its "
+                            f"controller 'policy'")
+            if not isinstance(rec.get("detection"), dict):
+                errs.append(f"{rec['name']}: detection scenario lacks its "
+                            f"'detection' parameter block")
+            if not isinstance(rec.get("t_oracle"), (int, float)):
+                errs.append(f"{rec['name']}: detection scenario lacks "
+                            f"t_oracle")
+            elif not isinstance(rec.get("overhead_vs_oracle"), (int, float)):
+                errs.append(f"{rec['name']}: detection scenario lacks "
+                            f"overhead_vs_oracle")
+            for key in ("false_replans", "suppressed", "detect_missed"):
+                if not isinstance(rec.get(key), int) or rec[key] < 0:
+                    errs.append(f"{rec['name']}: detection scenario needs a "
+                                f"non-negative int {key!r}")
+            for key in ("detect_lag_mean", "detect_lag_max"):
+                if key not in rec:
+                    errs.append(f"{rec['name']}: detection scenario "
+                                f"missing {key!r}")
+                elif rec[key] is not None and not isinstance(rec[key],
+                                                             (int, float)):
+                    errs.append(f"{rec['name']}.{key} not numeric or null")
+        elif "policy" in rec:
+            errs.append(f"{rec['name']}: policy on a non-detection scenario")
         sb = rec.get("stage_breakdown")
         if telemetry:
             # The tentpole invariant, enforced on every telemetry artifact:
@@ -327,8 +415,13 @@ def validate_artifact(artifact: dict) -> list[str]:
             errs.append(f"{rec['name']}: stage_breakdown present but "
                         f"telemetry is off")
     summary = artifact["summary"]
+    if any(rec.get("family") == "detection" for rec in scenarios) \
+            and "by_policy" not in summary:
+        errs.append("artifact has detection scenarios but no "
+                    "summary.by_policy block")
     for group, stats in [("overall", summary.get("overall", {}))] + \
-            sorted(summary.get("by_family", {}).items()):
+            sorted(summary.get("by_family", {}).items()) + \
+            sorted(summary.get("by_policy", {}).items()):
         for key in _SUMMARY_KEYS:
             if key not in stats:
                 errs.append(f"summary[{group}] missing {key!r}")

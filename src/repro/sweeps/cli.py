@@ -173,9 +173,14 @@ def cmd_run(args: argparse.Namespace) -> int:
     print(f"sweep profile={args.profile} seed={args.seed}: "
           f"{len(specs)} scenarios, workers={args.workers}"
           f"{' +telemetry' if args.telemetry else ''}", file=sys.stderr)
+    run_stats: dict = {}
     results = run_sweep(specs, workers=args.workers,
                         measure_latency=not args.deterministic,
-                        telemetry=args.telemetry)
+                        telemetry=args.telemetry, stats=run_stats)
+    if run_stats.get("retries"):
+        print(f"worker fan-out: {run_stats['retries']} chunk retr"
+              f"{'y' if run_stats['retries'] == 1 else 'ies'} after "
+              f"crash/hang", file=sys.stderr)
     bad = sanity_check(results)
     for msg in bad:
         print(f"INVARIANT FAIL: {msg}", file=sys.stderr)
@@ -184,7 +189,8 @@ def cmd_run(args: argparse.Namespace) -> int:
                                       seed=args.seed,
                                       deterministic=args.deterministic,
                                       schedgen_latency_ms=schedgen_ms,
-                                      telemetry=args.telemetry)
+                                      telemetry=args.telemetry,
+                                      retries=run_stats.get("retries", 0))
     art.write_artifact(artifact_obj, args.out)
     wall = time.perf_counter() - t_start
     overall = artifact_obj["summary"]["overall"]
@@ -224,10 +230,15 @@ def format_markdown_summary(artifact_obj: dict) -> str:
            f"{artifact_obj['scenario_count']} scenarios "
            f"(`{artifact_obj['schema']}`)", ""]
     out.append("| group | count | overhead p50 | overhead p99 | "
-               "overhead max | vs-LB p99 | no-replan p99 | gen ms p99 |")
-    out.append("|---|---|---|---|---|---|---|---|")
+               "overhead max | vs-LB p99 | no-replan p99 | vs-oracle p99 | "
+               "gen ms p99 |")
+    out.append("|---|---|---|---|---|---|---|---|---|")
     groups = [("**overall**", summary["overall"])]
     groups += sorted(summary.get("by_family", {}).items())
+    # Detection records again, grouped by controller policy - the rows that
+    # show what debounce/backoff buy over reacting to every probe.
+    groups += [(f"policy:{pol}", st)
+               for pol, st in sorted(summary.get("by_policy", {}).items())]
     for name, st in groups:
         out.append(
             f"| {name} | {st['count']} | {_md(st['overhead_optcc_p50'])} | "
@@ -235,6 +246,7 @@ def format_markdown_summary(artifact_obj: dict) -> str:
             f"{_md(st['overhead_optcc_max'])} | "
             f"{_md(st['optcc_vs_lb_p99'])} | "
             f"{_md(st.get('overhead_noreplan_p99'))} | "
+            f"{_md(st.get('overhead_vs_oracle_p99'))} | "
             f"{_md(st['gen_ms_p99'], '{:.3f}')} |")
     stages = summary["overall"].get("stages")
     if stages:

@@ -14,14 +14,17 @@ same results - the model is deterministic).
 """
 from __future__ import annotations
 
+import concurrent.futures
 import dataclasses
 import functools
 import time
+from concurrent.futures import ProcessPoolExecutor
+from concurrent.futures.process import BrokenProcessPool
 from typing import Optional, Sequence
 
 from repro.core.planner import make_plan
 from repro.core.schedule_vec import ring_arrays
-from repro.core.simulator import map_scenarios, simulate
+from repro.core.simulator import simulate
 from repro.sweeps.scenarios import GRIDS, ScenarioSpec
 
 
@@ -52,6 +55,17 @@ class ScenarioResult:
     # for replay scenarios the breakdown sums to t_noreplan, not t_optcc.
     t_noreplan: Optional[float] = None
     replans: Optional[int] = None
+    # Detection-family fields (spec.detection non-empty). t_optcc is the
+    # *imperfect* controller's adopted makespan; t_oracle the PR-8
+    # zero-delay perfect-knowledge controller's on the same timeline, so
+    # overhead_vs_oracle prices the detection imperfection itself.
+    policy: Optional[str] = None
+    t_oracle: Optional[float] = None
+    false_replans: Optional[int] = None
+    suppressed: Optional[int] = None
+    detect_lag_mean: Optional[float] = None
+    detect_lag_max: Optional[float] = None
+    detect_missed: Optional[int] = None
 
     @property
     def overhead_optcc(self) -> float:
@@ -65,6 +79,12 @@ class ScenarioResult:
     @property
     def overhead_ring(self) -> Optional[float]:
         return None if self.t_ring is None else self.t_ring / self.t0
+
+    @property
+    def overhead_vs_oracle(self) -> Optional[float]:
+        """Price of imperfect detection: imperfect controller's adopted
+        makespan vs the zero-delay perfect-knowledge controller's."""
+        return None if self.t_oracle is None else self.t_optcc / self.t_oracle
 
     @property
     def overhead_lb(self) -> float:
@@ -153,16 +173,48 @@ def _run_replay_scenario(spec: ScenarioSpec,
     profile = spec.profile()
     scale = lb.t0_fault_free(spec.p, spec.n, spec.gpus_per_server)
     tl = FaultTimeline.make([(t * scale, r, l) for t, r, l in spec.events])
+
+    detector = controller = None
+    if spec.detection:
+        from repro.detect import ControllerConfig, DetectorConfig
+        params = dict(spec.detection)
+        policy = str(params.pop("policy", "immediate"))
+        # Detection time parameters are specified in T0 units like the
+        # trace events; rescale them to element-time alongside.
+        detector = DetectorConfig(
+            probe_interval=float(params.get("probe_interval", 0.0)) * scale,
+            latency=float(params.get("latency", 0.0)) * scale,
+            noise=float(params.get("noise", 0.0)),
+            quant=float(params.get("quant", 0.0)),
+            fp_rate=float(params.get("fp_rate", 0.0)),
+            fn_rate=float(params.get("fn_rate", 0.0)),
+            seed=int(params.get("seed", 0)),
+        )
+        controller = ControllerConfig(
+            policy=policy,
+            debounce_probes=int(params.get("debounce_probes", 3)),
+            backoff_base=float(params.get("backoff_base", 0.0)) * scale,
+        )
+
     t_sim0 = time.perf_counter()
     rr = replay(profile, spec.n, tl, k=spec.k,
-                fill_bubbles=spec.fill_bubbles)
+                fill_bubbles=spec.fill_bubbles,
+                detector=detector, controller=controller)
     sim_seconds = time.perf_counter() - t_sim0
+    t_oracle = None
+    if spec.detection:
+        # Score the imperfect controller against the PR-8 zero-delay
+        # perfect-knowledge chain on the very same true timeline.
+        rr_oracle = replay(profile, spec.n, tl, k=spec.k,
+                           fill_bubbles=spec.fill_bubbles)
+        t_oracle = rr_oracle.t_replan
     plan0 = rr.plan0
     stage_breakdown = None
     if telemetry:
         from repro import obs
         stage_breakdown = obs.stage_breakdown(
             obs.collect(plan0.schedule, rr.noreplan_result))
+    det = rr.detection
     return ScenarioResult(
         spec=spec,
         algo=plan0.algo,
@@ -177,12 +229,28 @@ def _run_replay_scenario(spec: ScenarioSpec,
         stage_breakdown=stage_breakdown,
         t_noreplan=rr.t_noreplan,
         replans=rr.replans,
+        policy=rr.policy if spec.detection else None,
+        t_oracle=t_oracle,
+        false_replans=rr.false_replans if spec.detection else None,
+        suppressed=rr.suppressed if spec.detection else None,
+        detect_lag_mean=rr.detect_lag_mean if spec.detection else None,
+        detect_lag_max=rr.detect_lag_max if spec.detection else None,
+        detect_missed=det.missed if det is not None else None,
     )
+
+
+def _run_chunk(fn, chunk: list[ScenarioSpec]) -> list[ScenarioResult]:
+    """Worker-side unit of the fan-out: one chunk of specs, in order.
+    Module-level so it pickles into the process pool."""
+    return [fn(spec) for spec in chunk]
 
 
 def run_sweep(specs: Sequence[ScenarioSpec], workers: int = 0,
               measure_latency: bool = True,
-              telemetry: bool = False) -> list[ScenarioResult]:
+              telemetry: bool = False,
+              stats: Optional[dict] = None,
+              chunk_timeout: float = 300.0,
+              max_retries: int = 2) -> list[ScenarioResult]:
     """Run a scenario grid, preserving grid order.
 
     measure_latency=False zeroes all wall-clock fields, making the results -
@@ -190,11 +258,69 @@ def run_sweep(specs: Sequence[ScenarioSpec], workers: int = 0,
     (byte-identical across runs; the determinism CI check uses this).
     telemetry=True populates each result's stage_breakdown (deterministic
     too: attribution is pure arithmetic on simulated times).
+
+    The parallel fan-out is crash/hang-hardened: the grid is split into
+    chunks, and a chunk whose worker dies (BrokenProcessPool / OSError) or
+    hangs past `chunk_timeout` seconds is re-submitted to a fresh pool up to
+    `max_retries` times with exponential backoff; whatever still fails after
+    that runs serially in-process (scenarios are pure functions of their
+    specs, so re-running is always safe and bit-identical). Pass a `stats`
+    dict to receive {"retries": <chunk re-submissions>} - the sweep CLI
+    records it in the artifact. Deterministic errors raised by a scenario
+    itself (e.g. an invalid spec) are not retried; they propagate.
     """
     # partial of a module-level function pickles, so the process pool works.
     fn = functools.partial(run_scenario, measure_latency=measure_latency,
                            telemetry=telemetry)
-    return map_scenarios(fn, list(specs), workers=workers)
+    if stats is None:
+        stats = {}
+    stats.setdefault("retries", 0)
+    specs = list(specs)
+    if workers <= 0 or len(specs) <= 1:
+        return [fn(s) for s in specs]
+
+    csize = max(1, len(specs) // (8 * workers))
+    pending = [(i, specs[i:i + csize]) for i in range(0, len(specs), csize)]
+    results: list[Optional[ScenarioResult]] = [None] * len(specs)
+
+    for attempt in range(max_retries + 1):
+        if not pending:
+            break
+        if attempt:
+            stats["retries"] += len(pending)
+            time.sleep(0.25 * (2 ** (attempt - 1)))
+        try:
+            pool = ProcessPoolExecutor(max_workers=workers)
+        except OSError:
+            break                      # cannot pool at all -> serial below
+        failed: list[tuple[int, list[ScenarioSpec]]] = []
+        futs = {pool.submit(_run_chunk, fn, chunk): (start, chunk)
+                for start, chunk in pending}
+        try:
+            while futs:
+                # Hang detection is progress-based: the round only aborts
+                # when *no* chunk completes for chunk_timeout seconds, so a
+                # long grid that is still making progress never false-fires.
+                done, _ = concurrent.futures.wait(
+                    futs, timeout=chunk_timeout,
+                    return_when=concurrent.futures.FIRST_COMPLETED)
+                if not done:
+                    failed.extend(futs.values())  # hung (or queued behind one)
+                    futs.clear()
+                    break
+                for fut in done:
+                    start, chunk = futs.pop(fut)
+                    try:
+                        results[start:start + len(chunk)] = fut.result()
+                    except (OSError, BrokenProcessPool):
+                        failed.append((start, chunk))
+        finally:
+            pool.shutdown(wait=False, cancel_futures=True)
+        pending = sorted(failed)
+
+    for start, chunk in sorted(pending):   # last resort: serial, in-process
+        results[start:start + len(chunk)] = [fn(s) for s in chunk]
+    return results
 
 
 def grid_for(profile: str, seed: int = 0) -> list[ScenarioSpec]:

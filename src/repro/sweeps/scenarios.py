@@ -61,6 +61,18 @@ class ScenarioSpec:
     # engine multiplies by t0_fault_free(p, n, g) at run time). Empty =
     # static scenario. Tuple-of-tuples keeps the spec hashable.
     events: tuple[tuple[float, int, float], ...] = ()
+    # Imperfect-detection config as sorted (key, value) pairs (hashable);
+    # empty = the PR-8 zero-delay oracle controller (the replay family).
+    # Keys mirror repro.detect.DetectorConfig / ControllerConfig; the
+    # time-valued ones (probe_interval, latency, backoff_base) are in T0
+    # units like `events` and are rescaled by the engine.
+    detection: tuple[tuple[str, object], ...] = ()
+
+    @property
+    def policy(self) -> Optional[str]:
+        """Controller policy for detection scenarios, else None."""
+        d = dict(self.detection)
+        return str(d["policy"]) if "policy" in d else None
 
     def profile(self) -> BandwidthProfile:
         return BandwidthProfile(p=self.p, slowdown=self.slowdown,
@@ -351,6 +363,89 @@ def gen_replay(ps: Sequence[int], ks: Sequence[int],
 
 
 # ----------------------------------------------------------------------------
+# detection family: imperfect detectors + controller policies
+# ----------------------------------------------------------------------------
+#
+# Each scenario replays one of the checked-in fault traces (the flap /
+# recovery / reroute-cascade shapes) through an *imperfect* detector -
+# probe cadence x estimation noise x FP/FN rates - under one controller
+# policy (immediate / debounce / backoff), and is scored against the PR-8
+# zero-delay oracle on the same trace (`overhead_vs_oracle`). Falls back to
+# the equivalent generator shapes when ci/traces is absent (a grid built
+# outside a repo checkout must still carry the family - it is CI-gated).
+
+# (name, events) fallbacks mirroring ci/traces/*.json shapes.
+_DETECTION_FALLBACK_BASES = (
+    ("nic_flap", ((0.1, 3, 2.0), (0.22, 3, 1.0), (0.4, 3, 2.0),
+                  (0.48, 3, 1.0), (0.66, 3, 1.6), (0.8, 3, 1.0))),
+    ("reroute_cascade", ((0.0, 0, 8 / 3), (0.3, 0, 1.0), (0.3, 2, 1.6),
+                         (0.3, 5, 1.6), (0.7, 2, 1.0), (0.7, 5, 1.0))),
+    ("straggler_recovery", ((0.0, 1, 4.0), (0.35, 1, 1.0))),
+)
+
+
+def _detection_bases(p: int) -> list[tuple[str, tuple]]:
+    """(name, events) per checked-in trace, ranks wrapped modulo p."""
+    d = traces_dir()
+    if not os.path.isdir(d):
+        bases = list(_DETECTION_FALLBACK_BASES)
+    else:
+        bases = []
+        for fname in sorted(os.listdir(d)):
+            if fname.endswith(".json"):
+                tr = load_trace(os.path.join(d, fname))
+                bases.append((tr["name"], tuple(
+                    (float(t), int(r), float(l)) for t, r, l in tr["events"])))
+    return [(name, tuple((t, r % p, l) for t, r, l in events))
+            for name, events in bases]
+
+
+def gen_detection(ps: Sequence[int], ks: Sequence[int],
+                  probe_intervals: Sequence[float] = (0.02, 0.06),
+                  noises: Sequence[float] = (0.0, 0.15),
+                  fpfns: Sequence[tuple[float, float]] = ((0.0, 0.0),
+                                                          (0.02, 0.05)),
+                  policies: Sequence[str] = ("immediate", "debounce",
+                                             "backoff"),
+                  latency: float = 0.01,
+                  quant: float = 0.25) -> Iterator[ScenarioSpec]:
+    """Detection grid: traces x probe interval x noise x (FP, FN) x policy.
+
+    All detector times are in T0 units (scale-free, like trace events).
+    Each detector combo gets its own deterministic seed so FP/FN draws
+    differ across combos but never across runs."""
+    for p in ps:
+        bases = _detection_bases(p)
+        for k in ks:
+            for name, events in bases:
+                combo = 0
+                for pi in probe_intervals:
+                    for nz in noises:
+                        for fp, fn in fpfns:
+                            combo += 1
+                            for policy in policies:
+                                det = (
+                                    ("fn_rate", fn),
+                                    ("fp_rate", fp),
+                                    ("latency", latency),
+                                    ("noise", nz),
+                                    ("policy", policy),
+                                    ("probe_interval", pi),
+                                    ("quant", quant),
+                                    ("seed", combo),
+                                )
+                                yield ScenarioSpec(
+                                    name=(f"detect_{name}_p{p}_k{k}"
+                                          f"_pi{pi:g}_nz{nz:g}_fp{fp:g}"
+                                          f"_fn{fn:g}_{policy}"),
+                                    family="detection", p=p,
+                                    n=_seg_n(p, k), k=k,
+                                    slowdown=(1.0,) * p,
+                                    simulate_ring=False,
+                                    events=events, detection=det)
+
+
+# ----------------------------------------------------------------------------
 # named grids
 # ----------------------------------------------------------------------------
 
@@ -376,6 +471,7 @@ def smoke_grid(seed: int = 0) -> list[ScenarioSpec]:
     specs += gen_random_single_multi(count=96, ps=(8, 12, 16), ks=(16,),
                                      rng=rng)
     specs += gen_replay(ps=(8, 16), ks=(12,))
+    specs += gen_detection(ps=(8,), ks=(12,))
     return _dedup(specs)
 
 
@@ -410,6 +506,10 @@ def full_grid(seed: int = 0) -> list[ScenarioSpec]:
                                      rng=rng)
     specs += gen_replay(ps=(8, 16, 32), ks=(4, 16),
                         ells=(8 / 7, 2.0, 8 / 3, 4.0))
+    specs += gen_detection(ps=(8, 16), ks=(12,),
+                           probe_intervals=(0.01, 0.03, 0.08),
+                           noises=(0.0, 0.15, 0.3),
+                           fpfns=((0.0, 0.0), (0.02, 0.05), (0.08, 0.1)))
     return _dedup(specs)
 
 
@@ -421,7 +521,7 @@ def _dedup(specs: Sequence[ScenarioSpec]) -> list[ScenarioSpec]:
     out = []
     for s in specs:
         key = (s.p, s.n, s.k, s.slowdown, s.gpus_per_server, s.nvlink_mult,
-               s.fill_bubbles, s.events)
+               s.fill_bubbles, s.events, s.detection)
         if key in seen:
             continue
         seen.add(key)

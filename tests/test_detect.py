@@ -1,0 +1,386 @@
+"""Imperfect fault detection: the probe-based detector model, controller
+policies (immediate / debounce / backoff), mis-plan-tolerant execution in
+`planner.replay`, and the detection scenario family's artifact contract.
+
+The two acceptance pins:
+  * a perfect detector (zero latency/noise, no FP/FN, immediate policy) is
+    bit-identical to the PR-8 oracle controller on every checked-in
+    ci/traces file;
+  * the default imperfect detector on the nic_flap trace re-plans strictly
+    less under debounce than under immediate, at an equal-or-better
+    makespan.
+"""
+import math
+import os
+
+import pytest
+
+from repro.core import lower_bounds as lb
+from repro.core.model import BandwidthProfile, FaultTimeline
+from repro.core.planner import make_plan, replay
+from repro.detect import (MAX_CREDIBLE_ELL, POLICIES, ControllerConfig,
+                          DetectorConfig, apply_policy, debounce_timeline,
+                          estimate_timeline, estimate_usable)
+from repro.sweeps import build_artifact, run_scenario, validate_artifact
+from repro.sweeps.scenarios import load_trace, smoke_grid, traces_dir
+
+P, N, K = 8, 1920, 12
+TRACES = ("nic_flap.json", "straggler_recovery.json", "reroute_cascade.json")
+
+
+def _trace_timeline(name: str) -> FaultTimeline:
+    tr = load_trace(os.path.join(traces_dir(), name))
+    scale = lb.t0_fault_free(P, N, 1)
+    return FaultTimeline.make([(t * scale, int(r) % P, ell)
+                               for t, r, ell in tr["events"]])
+
+
+def _default_detector(seed: int = 0) -> DetectorConfig:
+    return DetectorConfig.default(scale=lb.t0_fault_free(P, N, 1), seed=seed)
+
+
+# ----------------------------------------------------------------------------
+# acceptance pins
+# ----------------------------------------------------------------------------
+
+@pytest.mark.parametrize("trace", TRACES)
+@pytest.mark.parametrize("policy", POLICIES)
+def test_perfect_detector_bit_identical_to_oracle(trace, policy):
+    """Zero-latency, zero-noise, FP=FN=0 detection must leave replay on the
+    PR-8 path IEEE-754-exactly, under every policy (their windows/floors all
+    collapse with a perfect continuous detector)."""
+    prof = BandwidthProfile.healthy(P)
+    tl = _trace_timeline(trace)
+    oracle = replay(prof, N, tl, k=K)
+    seen = replay(prof, N, tl, k=K, detector=DetectorConfig.perfect(),
+                  controller=ControllerConfig(policy=policy))
+    assert seen.t_chain == oracle.t_chain
+    assert seen.t_noreplan == oracle.t_noreplan
+    assert seen.t_replan == oracle.t_replan
+    assert seen.replans == oracle.replans
+    assert seen.false_replans == 0
+    assert seen.detect_lag_max in (None, 0.0)
+
+
+def test_debounce_beats_immediate_on_nic_flap():
+    """Acceptance criterion: on the flapping-NIC trace the default imperfect
+    detector re-plans strictly fewer times under debounce than under
+    immediate, at an equal-or-better makespan."""
+    prof = BandwidthProfile.healthy(P)
+    tl = _trace_timeline("nic_flap.json")
+    det = _default_detector()
+    imm = replay(prof, N, tl, k=K, detector=det,
+                 controller=ControllerConfig(policy="immediate"))
+    deb = replay(prof, N, tl, k=K, detector=det,
+                 controller=ControllerConfig(policy="debounce"))
+    assert deb.replans < imm.replans
+    assert deb.t_replan <= imm.t_replan * (1 + 1e-12)
+    assert deb.suppressed >= 1
+
+
+def test_backoff_bounds_replan_churn_on_nic_flap():
+    prof = BandwidthProfile.healthy(P)
+    tl = _trace_timeline("nic_flap.json")
+    det = _default_detector()
+    imm = replay(prof, N, tl, k=K, detector=det,
+                 controller=ControllerConfig(policy="immediate"))
+    bo = replay(prof, N, tl, k=K, detector=det,
+                controller=ControllerConfig(policy="backoff"))
+    assert bo.replans <= imm.replans
+    # The adopted makespan never regresses past no-replan by construction.
+    assert bo.t_replan <= bo.t_noreplan * (1 + 1e-12)
+
+
+# ----------------------------------------------------------------------------
+# detector model
+# ----------------------------------------------------------------------------
+
+def test_perfect_estimate_reproduces_truth_verbatim():
+    prof = BandwidthProfile.healthy(P)
+    tl = _trace_timeline("reroute_cascade.json")
+    d = estimate_timeline(prof, tl, horizon=1e9,
+                          config=DetectorConfig.perfect())
+    # The estimate omits t<=0 events (the launch profile is known exactly),
+    # so compare against the t=0-folded base, as replay does.
+    prof0 = tl.profile_at(prof, 0.0)
+    assert d.timeline.changes(prof0) == tl.changes(prof)
+    assert d.missed == 0 and d.false_events == 0
+    assert set(d.lags) <= {0.0}
+
+
+def test_continuous_latency_shifts_every_change():
+    prof = BandwidthProfile.healthy(P)
+    tl = FaultTimeline.make([(100.0, 2, 3.0), (400.0, 2, 1.0)])
+    d = estimate_timeline(prof, tl, horizon=1e4,
+                          config=DetectorConfig(latency=25.0))
+    assert [ev.t for ev in d.timeline.events] == [125.0, 425.0]
+    assert d.lags == (25.0, 25.0)
+    assert d.missed == 0
+
+
+def test_probed_detection_lags_by_probe_cadence():
+    prof = BandwidthProfile.healthy(P)
+    tl = FaultTimeline.make([(105.0, 1, 2.0)])
+    d = estimate_timeline(prof, tl, horizon=1000.0,
+                          config=DetectorConfig(probe_interval=50.0))
+    # First probe at/after the change is t=150.
+    assert [ev.t for ev in d.timeline.events] == [150.0]
+    assert d.lags == (45.0,)
+    assert d.probes == 20
+
+
+def test_quantization_snaps_reported_ell():
+    prof = BandwidthProfile.healthy(P)
+    tl = FaultTimeline.make([(10.0, 0, 1.9)])
+    d = estimate_timeline(prof, tl, horizon=100.0,
+                          config=DetectorConfig(probe_interval=20.0,
+                                                quant=0.25))
+    (ev,) = d.timeline.events
+    assert ev.ell == 2.0                        # 1.9 -> nearest 1 + m/4
+    # Recoveries always pass through exactly.
+    tl2 = FaultTimeline.make([(10.0, 0, 1.9), (50.0, 0, 1.0)])
+    d2 = estimate_timeline(prof, tl2, horizon=100.0,
+                           config=DetectorConfig(probe_interval=20.0,
+                                                 noise=0.3, quant=0.25,
+                                                 seed=3))
+    assert d2.timeline.events[-1].ell == 1.0
+
+
+def test_estimate_is_deterministic_per_seed():
+    prof = BandwidthProfile.healthy(P)
+    tl = _trace_timeline("nic_flap.json")
+    cfg = _default_detector(seed=5)
+    a = estimate_timeline(prof, tl, horizon=1e7, config=cfg)
+    b = estimate_timeline(prof, tl, horizon=1e7, config=cfg)
+    assert a.timeline == b.timeline and a.lags == b.lags
+    c = estimate_timeline(prof, tl, horizon=1e7,
+                          config=_default_detector(seed=6))
+    assert c.timeline != a.timeline or c.lags != a.lags
+
+
+def test_false_positives_blip_and_clear():
+    prof = BandwidthProfile.healthy(P)
+    tl = FaultTimeline.make([])
+    cfg = DetectorConfig(probe_interval=10.0, fp_rate=0.5, fp_ell=3.0,
+                         seed=1)
+    d = estimate_timeline(prof, tl, horizon=1000.0, config=cfg)
+    assert d.false_events > 0
+    changes = d.timeline.changes(prof)
+    for r, chs in changes.items():
+        # Effective changes alternate blip/clear (back-to-back blips on the
+        # same rank merge) and always land on probe ticks.
+        for i, (t, v) in enumerate(chs):
+            assert v == (3.0 if i % 2 == 0 else 1.0)
+            assert math.isclose(t % 10.0, 0.0, abs_tol=1e-9)
+
+
+def test_false_negatives_add_geometric_lag():
+    prof = BandwidthProfile.healthy(P)
+    tl = FaultTimeline.make([(5.0, 0, 4.0)])
+    base = estimate_timeline(prof, tl, horizon=1e4,
+                             config=DetectorConfig(probe_interval=10.0))
+    fn = estimate_timeline(prof, tl, horizon=1e4,
+                           config=DetectorConfig(probe_interval=10.0,
+                                                 fn_rate=0.9, seed=2))
+    assert fn.lags[0] >= base.lags[0]
+    assert fn.lags[0] % 10.0 == base.lags[0] % 10.0   # whole probes of delay
+
+
+def test_detector_config_validation():
+    with pytest.raises(ValueError):
+        DetectorConfig(probe_interval=-1.0)
+    with pytest.raises(ValueError):
+        DetectorConfig(fp_rate=1.0, probe_interval=1.0)
+    with pytest.raises(ValueError):
+        DetectorConfig(fn_rate=0.1)       # FN needs discrete probes
+    with pytest.raises(ValueError):
+        DetectorConfig(fp_ell=0.5, probe_interval=1.0)
+    assert DetectorConfig.perfect().is_perfect
+    assert not _default_detector().is_perfect
+
+
+# ----------------------------------------------------------------------------
+# controller policies
+# ----------------------------------------------------------------------------
+
+def test_debounce_suppresses_subcadence_flap():
+    prof = BandwidthProfile.healthy(P)
+    # Flap up and back inside one debounce window: the degradation is
+    # suppressed outright; the settle-back confirms but is a no-op trigger
+    # (it re-states the value the estimate already carries), so the flap
+    # produces zero effective re-plan triggers.
+    tl = FaultTimeline.make([(100.0, 0, 2.0), (110.0, 0, 1.0),
+                             (500.0, 1, 3.0)])
+    confirmed, suppressed = debounce_timeline(tl, prof, probe_interval=10.0,
+                                              k=3)
+    assert suppressed == 1
+    assert sorted(confirmed.changes(prof)) == [1]   # rank 0: no effective one
+    ev = confirmed.changes(prof)[1]
+    assert ev == [(520.0, 3.0)]
+
+
+def test_debounce_k1_and_continuous_are_identity():
+    prof = BandwidthProfile.healthy(P)
+    tl = FaultTimeline.make([(100.0, 0, 2.0)])
+    assert debounce_timeline(tl, prof, 10.0, 1) == (tl, 0)
+    assert debounce_timeline(tl, prof, 0.0, 5) == (tl, 0)
+
+
+def test_pure_fp_trace_never_confirms_under_debounce():
+    """A detector seeing only one-probe FP blips must not trigger a single
+    re-plan once debounced (the failover demo exits non-zero on this)."""
+    prof = BandwidthProfile.healthy(P)
+    det = DetectorConfig(probe_interval=50.0, fp_rate=0.3, seed=11)
+    rr = replay(prof, N, FaultTimeline.make([]), k=K, detector=det,
+                controller=ControllerConfig(policy="debounce"))
+    assert rr.replans == 0
+    assert rr.false_replans == 0
+    assert rr.suppressed > 0
+    assert rr.t_replan == rr.t_noreplan
+
+
+def test_backoff_spacing_doubles():
+    cfg = ControllerConfig(policy="backoff", backoff_base=8.0)
+    assert [cfg.backoff_spacing(1.0, i) for i in (1, 2, 3)] == [8.0, 16.0,
+                                                                32.0]
+    auto = ControllerConfig(policy="backoff")
+    assert auto.backoff_spacing(5.0, 1) == 20.0   # 4 probe intervals
+
+
+def test_controller_config_validation():
+    with pytest.raises(ValueError):
+        ControllerConfig(policy="yolo")
+    with pytest.raises(ValueError):
+        ControllerConfig(debounce_probes=0)
+    with pytest.raises(ValueError):
+        replay(BandwidthProfile.healthy(P), N, FaultTimeline.make([]), k=K,
+               controller=ControllerConfig())   # controller needs detector
+
+
+def test_unusable_estimate_forces_ring_fallback():
+    assert not estimate_usable(
+        BandwidthProfile.single_straggler(P, MAX_CREDIBLE_ELL * 2))
+    assert not estimate_usable(
+        BandwidthProfile(P, tuple([4.0] * (P - 1) + [1.0])))
+    assert estimate_usable(BandwidthProfile.single_straggler(P, 4.0))
+    plan = make_plan(BandwidthProfile.single_straggler(P, 4.0), N, k=K,
+                     force_ring=True)
+    assert plan.algo == "ring"
+
+
+def test_apply_policy_immediate_passes_through():
+    prof = BandwidthProfile.healthy(P)
+    tl = _trace_timeline("nic_flap.json")
+    d = estimate_timeline(prof, tl, horizon=1e7, config=_default_detector())
+    out, suppressed = apply_policy(d, prof, ControllerConfig())
+    assert out == d.timeline and suppressed == 0
+
+
+# ----------------------------------------------------------------------------
+# mis-plan execution
+# ----------------------------------------------------------------------------
+
+def test_misplan_executes_against_truth():
+    """A noisy estimate changes the plan, but simulation runs at true
+    rates: the detected makespan must stay within [oracle, no-replan]."""
+    prof = BandwidthProfile.healthy(P)
+    tl = _trace_timeline("straggler_recovery.json")
+    oracle = replay(prof, N, tl, k=K)
+    det = replay(prof, N, tl, k=K,
+                 detector=DetectorConfig(probe_interval=0.0, noise=0.4,
+                                         seed=4),
+                 controller=ControllerConfig())
+    assert det.t_replan >= oracle.t_replan * (1 - 1e-12)
+    assert det.t_replan <= det.t_noreplan * (1 + 1e-12)
+    assert det.t_noreplan == oracle.t_noreplan   # truth-driven either way
+
+
+def test_detection_results_attach_to_replay():
+    prof = BandwidthProfile.healthy(P)
+    tl = _trace_timeline("nic_flap.json")
+    rr = replay(prof, N, tl, k=K, detector=_default_detector(),
+                controller=ControllerConfig(policy="debounce"))
+    assert rr.policy == "debounce"
+    assert rr.detection is not None and rr.detection.probes > 0
+    assert rr.detect_lag_mean is None or rr.detect_lag_mean >= 0.0
+    oracle = replay(prof, N, tl, k=K)
+    assert oracle.policy == "oracle" and oracle.detection is None
+
+
+# ----------------------------------------------------------------------------
+# FailureInjector -> FaultTimeline bridge
+# ----------------------------------------------------------------------------
+
+def test_injector_to_timeline_diffs_states():
+    from repro.comms.fault import FailureInjector, FaultState
+    inj = FailureInjector.nic_loss(P, step=100, straggler=3, ell=2.5,
+                                   repair_step=200)
+    tl = inj.to_timeline(t_per_step=2.0)
+    assert [(e.t, e.rank, e.ell) for e in tl.events] == \
+        [(200.0, 3, 2.5), (400.0, 3, 1.0)]
+    # Only ranks whose slowdown changes emit events; a step that re-states
+    # the same whole-cluster state emits nothing.
+    inj2 = FailureInjector(P, {10: FaultState(P, 0, 2.0),
+                               20: FaultState(P, 0, 2.0),
+                               30: FaultState(P, 1, 3.0)})
+    tl2 = inj2.to_timeline(t_per_step=1.0)
+    assert [(e.t, e.rank, e.ell) for e in tl2.events] == \
+        [(10.0, 0, 2.0), (30.0, 0, 1.0), (30.0, 1, 3.0)]
+    with pytest.raises(ValueError):
+        inj.to_timeline(t_per_step=0.0)
+
+
+def test_injector_timeline_drives_replay():
+    from repro.comms.fault import FailureInjector
+    inj = FailureInjector.nic_loss(P, step=0, straggler=0, ell=4.0,
+                                   repair_step=5)
+    scale = lb.t0_fault_free(P, N, 1)
+    tl = inj.to_timeline(t_per_step=0.1 * scale)
+    rr = replay(BandwidthProfile.healthy(P), N, tl, k=K)
+    assert rr.replans >= 1
+    assert rr.t_replan <= rr.t_noreplan
+
+
+# ----------------------------------------------------------------------------
+# scenario family + artifact contract
+# ----------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def detection_results():
+    specs = [s for s in smoke_grid(seed=0) if s.family == "detection"]
+    assert specs, "smoke grid lost its detection family"
+    assert {dict(s.detection)["policy"] for s in specs} == set(POLICIES)
+    return [run_scenario(s, measure_latency=False) for s in specs[::7]]
+
+
+def test_detection_rows_validate(detection_results):
+    art = build_artifact(detection_results, profile="detect/7", seed=0,
+                         deterministic=True)
+    assert validate_artifact(art) == []
+    assert set(art["summary"]["by_policy"]) <= set(POLICIES)
+    for rec in art["scenarios"]:
+        assert rec["family"] == "detection"
+        assert rec["policy"] in POLICIES
+        assert rec["t_optcc"] <= rec["t_noreplan"] * (1 + 1e-9)
+        assert rec["overhead_vs_oracle"] >= 1.0 - 1e-9 or \
+            rec["t_optcc"] <= rec["t_oracle"]
+        assert rec["detection"]["probe_interval"] > 0
+
+
+def test_detection_summary_has_oracle_percentiles(detection_results):
+    art = build_artifact(detection_results, profile="detect/7", seed=0,
+                         deterministic=True)
+    det = art["summary"]["by_family"]["detection"]
+    for key in ("overhead_vs_oracle_p50", "overhead_vs_oracle_p99",
+                "overhead_vs_oracle_max", "false_replans_total"):
+        assert key in det
+    for st in art["summary"]["by_policy"].values():
+        assert st["count"] > 0
+
+
+def test_policy_on_non_detection_row_rejected(detection_results):
+    art = build_artifact(detection_results, profile="detect/7", seed=0,
+                         deterministic=True)
+    art["scenarios"][0]["family"] = "replay"
+    errs = validate_artifact(art)
+    assert any("policy on a non-detection" in e for e in errs)

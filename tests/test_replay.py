@@ -146,7 +146,7 @@ def test_load_trace_rejects_malformed(tmp_path):
 
 @pytest.fixture(scope="module")
 def replay_results():
-    specs = [s for s in smoke_grid(seed=0) if s.events]
+    specs = [s for s in smoke_grid(seed=0) if s.family == "replay"]
     assert specs, "smoke grid lost its replay family"
     return [run_scenario(s, measure_latency=False, telemetry=True)
             for s in specs[::3]]
@@ -169,7 +169,8 @@ def test_replay_const_twin_is_bit_identical():
     """Acceptance criterion: the constant-timeline replay scenario equals
     its static-profile twin IEEE-754-exactly."""
     grid = smoke_grid(seed=0)
-    const = [s for s in grid if s.events and "const" in s.name]
+    const = [s for s in grid
+             if s.family == "replay" and "const" in s.name]
     assert const
     for spec in const:
         ell = spec.events[0][2]

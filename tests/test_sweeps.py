@@ -44,17 +44,20 @@ def test_smoke_grid_size_and_diversity():
     specs = smoke_grid(seed=0)
     assert len(specs) >= 200
     fams = {s.family for s in specs}
-    assert {"healthy", "single", "multi", "multigpu", "correlated"} <= fams
+    assert {"healthy", "single", "multi", "multigpu", "correlated",
+            "replay", "detection"} <= fams
     # Distinct scenarios: no two specs share the same physical setup
-    # (replay specs differ by their failure timeline too).
+    # (replay specs differ by their failure timeline, detection specs by
+    # their detector/controller parameters too).
     keys = {(s.p, s.n, s.k, s.slowdown, s.gpus_per_server, s.nvlink_mult,
-             s.events)
+             s.events, s.detection)
             for s in specs}
     assert len(keys) == len(specs)
     # The nightly grid keeps every family too (dedup must not fold the
     # correlated-fault block into multigpu).
     full_fams = {s.family for s in full_grid(seed=0)}
-    assert {"healthy", "single", "multi", "multigpu", "correlated"} <= full_fams
+    assert {"healthy", "single", "multi", "multigpu", "correlated",
+            "replay", "detection"} <= full_fams
 
 
 def test_heterogeneous_ells_present():
@@ -161,3 +164,116 @@ def test_percentile():
     assert percentile(xs, 99) == pytest.approx(99.01)
     assert percentile([7.0], 99) == 7.0
     assert percentile(xs, 0) == 1 and percentile(xs, 100) == 100
+
+
+# ----------------------------------------------------------------------------
+# schema migration chain (v1 -> v2 -> v3 -> v4)
+# ----------------------------------------------------------------------------
+
+def _v1_artifact(deterministic: bool = True) -> dict:
+    """A minimal but structurally honest optcc-sweep/1 artifact: v1 wrote
+    0.0 (not null) for unmeasured wall-clock fields, predates telemetry,
+    the replay/detection families, and the retry counter."""
+    summary_stats = {
+        "count": 1,
+        "overhead_optcc_p50": 1.5, "overhead_optcc_p99": 1.5,
+        "overhead_optcc_max": 1.5,
+        "optcc_vs_lb_p50": 1.0, "optcc_vs_lb_p99": 1.0,
+        "optcc_vs_lb_max": 1.0,
+        "gen_ms_p50": 0.0, "gen_ms_p99": 0.0,
+    }
+    return {
+        "schema": "optcc-sweep/1",
+        "profile": "smoke", "seed": 0,
+        "deterministic": deterministic,
+        "schedgen_latency_ms": None,
+        "scenario_count": 1,
+        "summary": {"overall": dict(summary_stats), "by_family": {}},
+        "scenarios": [{
+            "name": "s", "family": "single", "algo": "optcc",
+            "p": 8, "k": 4, "n": 448, "gpus_per_server": 1,
+            "nvlink_mult": None, "num_flows": 10,
+            "stragglers": [0], "ells": [1.5],
+            "t0": 100.0, "lower_bound": 120.0, "t_optcc": 150.0,
+            "t_ring": 160.0, "t_predicted": 150.0,
+            "overhead_optcc": 1.5, "overhead_ring": 1.6,
+            "overhead_lb": 1.2, "optcc_vs_lb": 1.25,
+            "gen_ms": 0.0, "sim_ms": 0.0,
+        }],
+    }
+
+
+def _load_from(tmp_path, obj) -> dict:
+    from repro.sweeps import load_artifact, write_artifact
+    path = str(tmp_path / "a.json")
+    write_artifact(obj, path)
+    return load_artifact(path)
+
+
+def test_migration_v1_to_current(tmp_path):
+    got = _load_from(tmp_path, _v1_artifact())
+    assert got["schema"] == SCHEMA
+    assert got["telemetry"] is False             # v1 -> v2
+    assert got["retries"] is None                # v3 -> v4: unknown, not 0
+    # v1 -> v2 on a deterministic artifact: 0.0 placeholders become null.
+    assert got["scenarios"][0]["gen_ms"] is None
+    assert got["scenarios"][0]["sim_ms"] is None
+    assert got["summary"]["overall"]["gen_ms_p50"] is None
+    assert validate_artifact(got) == []
+
+
+def test_migration_v1_measured_keeps_latencies(tmp_path):
+    got = _load_from(tmp_path, _v1_artifact(deterministic=False))
+    assert got["schema"] == SCHEMA
+    assert got["scenarios"][0]["gen_ms"] == 0.0  # measured zeros survive
+    assert validate_artifact(got) == []
+
+
+def test_migration_v1_empty_families_and_scenarios(tmp_path):
+    obj = _v1_artifact()
+    obj["scenarios"] = []
+    obj["scenario_count"] = 0
+    obj["summary"]["by_family"] = {}
+    got = _load_from(tmp_path, obj)              # must not crash
+    assert got["schema"] == SCHEMA and got["retries"] is None
+
+
+def test_migration_v1_missing_optional_keys(tmp_path):
+    obj = _v1_artifact()
+    del obj["schedgen_latency_ms"]               # optional in v1 writers
+    got = _load_from(tmp_path, obj)
+    assert got["schema"] == SCHEMA
+    assert validate_artifact(got) == []
+
+
+def test_migration_v3_to_v4(tmp_path, sub_artifact):
+    obj = copy.deepcopy(sub_artifact)
+    obj["schema"] = "optcc-sweep/3"
+    del obj["retries"]
+    got = _load_from(tmp_path, obj)
+    assert got["schema"] == SCHEMA
+    assert got["retries"] is None
+    assert validate_artifact(got) == []
+    # A current artifact round-trips untouched: retries stays 0.
+    got2 = _load_from(tmp_path, sub_artifact)
+    assert got2["retries"] == 0
+
+
+# ----------------------------------------------------------------------------
+# hardened worker fan-out
+# ----------------------------------------------------------------------------
+
+def test_run_sweep_records_zero_retries_on_clean_run():
+    stats = {}
+    res = run_sweep(SUB[:8], workers=2, measure_latency=False, stats=stats)
+    assert stats["retries"] == 0
+    assert [r.spec.name for r in res] == [s.name for s in SUB[:8]]
+    # Parallel fan-out returns bit-identical results to serial.
+    ser = run_sweep(SUB[:8], workers=0, measure_latency=False)
+    assert [r.t_optcc for r in res] == [r.t_optcc for r in ser]
+
+
+def test_run_sweep_serial_ignores_pool_machinery():
+    stats = {}
+    res = run_sweep(SUB[:2], workers=0, measure_latency=False, stats=stats)
+    assert len(res) == 2 and stats["retries"] == 0
