@@ -5,13 +5,15 @@ numpy array program; also CI-gated via schedgen_latency_ms_max in
 ci/sweep_thresholds.json), (b) the columnar arrays path the sweep engine
 simulates (same O(p^2 k) flow graph as Flow objects, built by vectorized
 generators), and (c) full Flow-object materialization (the executor's
-input). Derived = wall milliseconds.
+input). The descriptor path is reported per registered algorithm at
+p=1024 so the <1 ms claim covers every topology the planner can emit,
+not just the auto pick. Derived = wall milliseconds.
 """
 from __future__ import annotations
 
 import time
 
-from repro.core import BandwidthProfile, make_plan
+from repro.core import BandwidthProfile, make_plan, registry
 from benchmarks.common import row
 
 
@@ -26,6 +28,21 @@ def run():
         dt = (time.perf_counter() - t0) / 5
         rows.append(row(f"schedgen_descriptor_p{p}", dt, dt * 1e3,
                         "paper: <1ms at p=1024"))
+    # Descriptor path per registered algorithm (flat p=1024 grid plus an
+    # 8-GPU-server profile so `hierarchical` gets a row too).
+    for prof in (BandwidthProfile.single_straggler(1024, 1.5),
+                 BandwidthProfile.single_straggler(1024, 1.5, g=8)):
+        g = prof.gpus_per_server
+        n = (prof.p - 1) * 4 * 16
+        for algo in registry.supported(prof):
+            best = float("inf")
+            for _ in range(5):
+                t0 = time.perf_counter()
+                make_plan(prof, n, k=4, materialize=False, algo=algo)
+                best = min(best, time.perf_counter() - t0)
+            rows.append(row(f"schedgen_descriptor_{algo}_p1024_g{g}",
+                            best, best * 1e3,
+                            "CI-gated: worst algo must stay <1ms"))
     for p in (64, 256, 1024):
         prof = BandwidthProfile.single_straggler(p, 1.5)
         n = (p - 1) * 4 * 16

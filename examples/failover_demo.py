@@ -11,7 +11,9 @@ never WHAT is computed.
 With ``--trace PATH`` the demo instead simulates the same degraded
 scenario's OptCC schedule with telemetry, writes a Chrome trace (open in
 chrome://tracing or Perfetto) and prints the critical-path stage breakdown
-- no JAX subprocess is run.
+- no JAX subprocess is run. Add ``--algo NAME`` to force any algorithm
+registered in `repro.core.registry` (ring, optcc, dbtree, torus2d, ...)
+instead of letting the planner choose.
 
 With ``--timeline [TRACE.json]`` the demo replays the degraded scenario
 under a time-varying failure timeline (default: member 3 recovers at
@@ -78,7 +80,7 @@ print("OK: OptCC-synced training is numerically identical to psum")
 """
 
 
-def trace_scenario(path: str) -> None:
+def trace_scenario(path: str, algo: str = "auto") -> None:
     """Simulate the demo's degraded scenario (p=8, member 3 at l=1.75) with
     telemetry and write a Chrome trace plus a stage breakdown to stdout."""
     from repro import obs
@@ -87,10 +89,12 @@ def trace_scenario(path: str) -> None:
     from repro.core.simulator import simulate
 
     profile = BandwidthProfile.single_straggler(8, 1.75, straggler=3)
-    plan = make_plan(profile, n=1_000_000, k=16, materialize="arrays")
+    plan = make_plan(profile, n=1_000_000, k=16, materialize="arrays",
+                     algo=algo)
     res = simulate(plan.schedule, telemetry=True)
     obs.write_chrome_trace(res.telemetry, path, name="failover_demo")
-    print(f"wrote {path}: algo={plan.algo} T={res.makespan:.6g} "
+    print(f"wrote {path}: algo={plan.algo} topology={plan.topology} "
+          f"T={res.makespan:.6g} "
           f"(T0={plan.t0:.6g}, overhead {res.makespan / plan.t0:.3f}x, "
           f"{res.telemetry.nflows} flows)")
     for stage, v in sorted(obs.stage_breakdown(res.telemetry).items(),
@@ -186,6 +190,10 @@ def main():
     ap.add_argument("--trace", metavar="PATH", default=None,
                     help="write a Chrome trace of the degraded scenario's "
                          "simulated schedule and exit (skips the JAX run)")
+    ap.add_argument("--algo", default="auto",
+                    help="schedule algorithm for --trace: 'auto' (planner "
+                         "picks) or any name in repro.core.registry, e.g. "
+                         "ring, optcc, dbtree, torus2d (default: auto)")
     ap.add_argument("--timeline", metavar="TRACE.json", nargs="?",
                     const="", default=None,
                     help="replay the degraded scenario under a failure "
@@ -197,7 +205,7 @@ def main():
         timeline_scenario(args.timeline or None)
         return
     if args.trace:
-        trace_scenario(args.trace)
+        trace_scenario(args.trace, algo=args.algo)
         return
     env = dict(os.environ)
     env["PYTHONPATH"] = str(REPO / "src")

@@ -10,8 +10,7 @@ import sys
 
 sys.path.insert(0, "src")
 
-from repro.core import (BandwidthProfile, make_plan, simulate,
-                        ring_allreduce_schedule)
+from repro.core import BandwidthProfile, make_plan, simulate
 from repro.core import lower_bounds as lb
 from repro.core.baselines import r2ccl_time
 
@@ -31,7 +30,8 @@ def main():
           f"{plan.lower_bound / t0:.3f}x")
 
     t_optcc = simulate(plan.schedule).makespan
-    t_iccl = simulate(ring_allreduce_schedule(plan.profile, n)).makespan
+    ring_plan = make_plan(plan.profile, n, algo="ring")
+    t_iccl = simulate(ring_plan.schedule).makespan
     t_r2 = r2ccl_time(p, n, ell)
 
     print("\ncompletion time vs fault-free NCCL ring (lower is better):")

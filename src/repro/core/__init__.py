@@ -2,31 +2,67 @@
 
 Public API:
   BandwidthProfile, Flow, Op, Schedule       - flow model (core.model)
+  validate_schedule_meta                     - Schedule.meta key contract
   simulate, simulate_many, SimResult         - bandwidth simulator
   execute, verify_allreduce                  - data-level verification
-  ring_allreduce_schedule                    - NCCL ring / ICCL baseline
-  optcc_schedule                             - OptCC (all three settings)
-  make_plan, Plan                            - online planner
-  lower_bounds                               - Theorems 1,2,3,6,13 + times
+  registry                                   - named schedule generators
+                                               (ring/optcc/hierarchical/
+                                               dbtree/torus2d)
+  make_plan, Plan, topology_of               - online planner;
+                                               make_plan(algo="auto"|name)
+  lower_bounds                               - Theorems 1,2,3,6,13 + times,
+                                               plus per-topology bounds
+
+Deprecated (still importable, with a DeprecationWarning): the direct
+generator entry points `ring_allreduce_schedule`, `optcc_schedule`,
+`optcc_single_schedule`, `optcc_multi_schedule`, `optcc_multi_gpu_schedule`.
+Use `make_plan(profile, n, k, algo=...)` or `registry.get(name).generate`;
+the concrete functions remain public at their defining modules
+(`repro.core.ring`, `repro.core.schedule`) for tests and internals.
 """
-from repro.core import lower_bounds
+import warnings as _warnings
+
+from repro.core import lower_bounds, registry
 from repro.core.baselines import (iccl_time_asymptotic, iccl_time_simulated,
                                   nccl_no_failure_time, r2ccl_time)
 from repro.core.executor import execute, verify_allreduce
-from repro.core.model import BandwidthProfile, Flow, Op, Schedule
-from repro.core.planner import Plan, make_plan
-from repro.core.ring import ring_allreduce_schedule
-from repro.core.schedule import (optcc_multi_gpu_schedule,
-                                 optcc_multi_schedule, optcc_schedule,
-                                 optcc_single_schedule)
+from repro.core.model import (BandwidthProfile, Flow, Op, Schedule,
+                              validate_schedule_meta)
+from repro.core.planner import Plan, make_plan, topology_of
 from repro.core.simulator import SimResult, simulate, simulate_many
 
 __all__ = [
     "BandwidthProfile", "Flow", "Op", "Schedule", "SimResult", "simulate",
-    "simulate_many",
-    "execute", "verify_allreduce", "ring_allreduce_schedule",
+    "simulate_many", "validate_schedule_meta",
+    "execute", "verify_allreduce", "registry", "ring_allreduce_schedule",
     "optcc_schedule", "optcc_single_schedule", "optcc_multi_schedule",
-    "optcc_multi_gpu_schedule", "make_plan", "Plan", "lower_bounds",
+    "optcc_multi_gpu_schedule", "make_plan", "Plan", "topology_of",
+    "lower_bounds",
     "nccl_no_failure_time", "iccl_time_asymptotic", "iccl_time_simulated",
     "r2ccl_time",
 ]
+
+_DEPRECATED = {
+    "ring_allreduce_schedule": ("repro.core.ring", "ring_allreduce_schedule"),
+    "optcc_schedule": ("repro.core.schedule", "optcc_schedule"),
+    "optcc_single_schedule": ("repro.core.schedule", "optcc_single_schedule"),
+    "optcc_multi_schedule": ("repro.core.schedule", "optcc_multi_schedule"),
+    "optcc_multi_gpu_schedule": ("repro.core.schedule",
+                                 "optcc_multi_gpu_schedule"),
+}
+
+
+def __getattr__(name):
+    """Lazy deprecation shims for the pre-registry generator entry points."""
+    try:
+        module, attr = _DEPRECATED[name]
+    except KeyError:
+        raise AttributeError(
+            f"module {__name__!r} has no attribute {name!r}") from None
+    _warnings.warn(
+        f"importing {name} from repro.core is deprecated; use "
+        f"repro.core.make_plan(algo=...) / repro.core.registry.get(...), "
+        f"or import it from {module}",
+        DeprecationWarning, stacklevel=2)
+    import importlib
+    return getattr(importlib.import_module(module), attr)

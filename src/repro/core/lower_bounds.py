@@ -217,6 +217,93 @@ def optcc_time(p: int, n: float, ells: Sequence[float], k: int,
 
 
 # ----------------------------------------------------------------------------
+# Per-topology bounds and time models (schedule registry, PR 10)
+#
+# Unlike the ell-parameterized paper bounds above, these take the full
+# BandwidthProfile: the tree/torus bounds depend on *which* rank is slow
+# (an interior tree rank hurts; a leaf barely does), not just the multiset
+# of slowdowns. Each bound is the port-occupancy argument - a rank's NIC
+# send (resp. recv) port must serialize all bytes it sends (receives),
+# each at >= size * slowdown - evaluated on the exact integer splits the
+# matching generator in `core.topologies` emits, so rounding can never
+# push the bound above the simulated time. The time models are reporting
+# estimates (registry `auto=False` entries never steer `make_plan`).
+# ----------------------------------------------------------------------------
+
+def lb_dbtree(profile, n: float) -> float:
+    """Double binary tree: rank r's NIC moves `dbtree_traffic[r]` in each
+    direction (send == recv), so T >= max_r traffic[r] * l_r."""
+    import numpy as np
+
+    from repro.core.topologies import dbtree_traffic
+    traffic = dbtree_traffic(profile.p, n)
+    return float(np.max(traffic * np.asarray(profile.slowdown)))
+
+
+def dbtree_time(profile, n: float, k: int) -> float:
+    """Traffic bound plus the up-and-down pipeline ramp: ~2 * depth hops of
+    one n/(2k) segment each at the slowest rate."""
+    import math
+    depth = math.ceil(math.log2(profile.p + 1))
+    return (lb_dbtree(profile, n)
+            + 2.0 * depth * (n / (2.0 * max(k, 1))) * max(profile.slowdown))
+
+
+def lb_torus2d(profile, n: float) -> float:
+    """2-D torus: T >= max_r max(send_r, recv_r) * l_r over the exact
+    4-phase traffic of the generator's splits."""
+    import numpy as np
+
+    from repro.core.topologies import torus2d_traffic
+    send, recv = torus2d_traffic(profile.p, n)
+    sl = np.asarray(profile.slowdown)
+    return float(np.max(np.maximum(send, recv) * sl))
+
+
+def torus2d_time(profile, n: float, k: int = 0) -> float:
+    """Sum over the 4 phases of that phase's slowest port (the phases are
+    barrier-separated per chunk, so this always dominates `lb_torus2d`)."""
+    import numpy as np
+
+    from repro.core.topologies import torus2d_traffic
+    sl = np.asarray(profile.slowdown)
+    total = 0.0
+    for send, recv in torus2d_traffic(profile.p, n, per_phase=True):
+        total += float(np.max(np.maximum(send, recv) * sl))
+    return total
+
+
+def _hier_lead_ells(profile) -> list:
+    g = profile.gpus_per_server
+    leads = [profile.slowdown[s * g] for s in range(profile.num_servers)]
+    return [l for l in leads if l > 1.0]
+
+
+def lb_hierarchical(profile, n: float) -> float:
+    """Hierarchical (NVLink reduce per server + inter-server collective over
+    one lead per server): the leads' NICs execute a q-rank AllReduce of the
+    server sums (universal q-rank bound at the leads' *actual* NIC rates),
+    and every non-lead GPU must push its full vector out - and pull the
+    full result back in - over NVLink."""
+    q = profile.num_servers
+    return max(lower_bound(q, n, _hier_lead_ells(profile), 1),
+               n / profile.nvlink_rate)
+
+
+def hierarchical_time(profile, n: float, k: int) -> float:
+    """Inner OptCC/ring prediction on the server-level profile plus the
+    NVLink collect + distribute chains (imperfectly overlapped)."""
+    from repro.core.topologies import server_slowdowns
+    q = profile.num_servers
+    inner_ells = [l for l in server_slowdowns(profile) if l > 1.0]
+    if inner_ells:
+        inner = optcc_time(q, n, inner_ells, k, 1)
+    else:
+        inner = t0_fault_free(q, n, 1)
+    return inner + 2.0 * n / profile.nvlink_rate
+
+
+# ----------------------------------------------------------------------------
 # Asymptotic (k -> inf) versions, for benchmark plots
 # ----------------------------------------------------------------------------
 

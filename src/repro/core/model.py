@@ -330,6 +330,19 @@ class Schedule:
 
     nic_flows are timed against NIC ports; nvlink_flows against per-GPU
     NVLink ports at rate (g-1)x NIC speed. For g == 1, nvlink_flows is empty.
+
+    Every generator stamps a `meta` dict honoring the key contract below
+    (`validate_schedule_meta`); extra generator-specific keys are fine.
+
+      algo       str, the concrete construction ("ring", "optcc-single",
+                 "optcc-multi", "optcc-multigpu", "hierarchical", "dbtree",
+                 "torus2d"). What `Plan.algo` and sweep artifacts report.
+      topology   str, the schedule-registry name the construction belongs
+                 to (`planner.topology_of(algo)`): the optcc-* variants all
+                 map to "optcc". What `make_plan(algo=...)` accepts.
+      stage_ids  int array of len == num_flows mapping each flow (by fid)
+                 to its pipeline stage in STAGE_NAMES, for telemetry
+                 attribution (repro.obs).
     """
 
     profile: BandwidthProfile
@@ -349,3 +362,32 @@ class Schedule:
         if self.arrays is not None:
             return self.arrays.nflows
         return len(self.nic_flows) + len(self.nvlink_flows)
+
+
+def validate_schedule_meta(schedule: Schedule) -> None:
+    """Assert `schedule.meta` honors the documented key contract (Schedule
+    docstring): non-empty `algo`/`topology` strings and a full-length
+    `stage_ids` vector with in-range stage indices. `simulate` runs this in
+    debug mode (REPRO_DEBUG=1) so a generator that forgets a key fails the
+    first simulation, not a sweep artifact check three layers up."""
+    meta = schedule.meta
+    for key in ("algo", "topology"):
+        val = meta.get(key)
+        if not (isinstance(val, str) and val):
+            raise ValueError(
+                f"schedule.meta[{key!r}] must be a non-empty str, got "
+                f"{val!r} (algo={meta.get('algo')!r})")
+    stage_ids = meta.get("stage_ids")
+    if stage_ids is None:
+        raise ValueError(
+            f"schedule.meta['stage_ids'] missing (algo={meta['algo']!r})")
+    import numpy as np
+    sids = np.asarray(stage_ids)
+    if sids.shape != (schedule.num_flows,):
+        raise ValueError(
+            f"stage_ids has shape {sids.shape}, expected "
+            f"({schedule.num_flows},) (algo={meta['algo']!r})")
+    if sids.size and (sids.min() < 0 or sids.max() >= len(STAGE_NAMES)):
+        raise ValueError(
+            f"stage_ids values outside [0, {len(STAGE_NAMES)}) "
+            f"(algo={meta['algo']!r})")

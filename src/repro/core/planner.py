@@ -14,25 +14,42 @@ from __future__ import annotations
 
 import dataclasses
 import time
+import warnings
 from collections.abc import Mapping
 
 import numpy as np
 
 from repro.core import lower_bounds as lb
+from repro.core import registry
 from repro.core.model import BandwidthProfile, FaultTimeline, Schedule
 from repro.core.schedule import optcc_schedule
+
+
+def topology_of(algo: str) -> str:
+    """Normalize a plan/schedule `algo` to its registry topology name: the
+    optcc dispatcher's per-regime variants ("optcc-single", "optcc-multi",
+    "optcc-multigpu") all collapse to "optcc"; everything else (ring,
+    hierarchical, dbtree, torus2d) is its own topology."""
+    if algo.startswith("optcc"):
+        return "optcc"
+    return algo
 
 
 @dataclasses.dataclass
 class Plan:
     profile: BandwidthProfile
     schedule: Schedule | None    # None when materialize=False
-    algo: str                    # "ring" (healthy) or "optcc-*"
+    algo: str                    # "ring", "optcc-*", or a registry name
     lower_bound: float           # element-time units
     predicted_time: float        # closed-form achieved time
     t0: float                    # fault-free optimum
     gen_seconds: float           # wall time to construct the plan
     descriptor: dict = dataclasses.field(default_factory=dict)
+    topology: str = ""           # registry name (topology_of(algo))
+
+    def __post_init__(self):
+        if not self.topology:
+            self.topology = topology_of(self.algo)
 
     @property
     def predicted_overhead(self) -> float:
@@ -107,25 +124,85 @@ def plan_descriptor(profile: BandwidthProfile, n: int, k: int) -> dict:
 def make_plan(profile: BandwidthProfile, n: int, k: int = 16,
               fill_bubbles: bool = True,
               materialize: bool | str = True,
-              force_ring: bool = False) -> Plan:
+              algo: str = "auto",
+              force_ring: bool | None = None) -> Plan:
     """materialize=True -> Flow-object schedule (executor-ready);
     materialize="arrays" -> columnar schedule (simulator hot path; same
     flow graph, no Flow objects); materialize=False -> descriptor only.
 
-    The planner picks the *predicted-faster* of OptCC and the FIFO ring.
-    The FIFO ring on a degraded profile costs exactly l_max 2(p-1)n/p (the
-    slowest link paces a contention-free ring), so when OptCC's pipeline
-    fill would cost more - small p, shallow k, l close to 1 - staying on
-    the ring is the right call, and the calibrated optcc_time (within 10%
-    of the simulator, tests/test_schedule_time.py) makes this comparison
-    trustworthy at planning time.
+    ``algo`` selects from the schedule registry (`core.registry`):
 
-    force_ring=True skips the OptCC comparison entirely and plans the FIFO
-    ring for the profile - the mis-plan fallback `replay` takes when a
-    fault detector's estimate is not credible enough to pick a straggler
-    set from (`repro.detect.estimate_usable`). The ring is valid under any
-    profile, including ones OptCC's closed form would degenerate on (e.g.
-    an estimate claiming p-1 stragglers)."""
+    * ``"auto"`` (default) compares the auto-eligible registered time
+      models and picks the predicted-fastest. Today that is OptCC vs the
+      FIFO ring, exactly the historical planner choice: the ring on a
+      degraded profile costs exactly l_max 2(p-1)n/p (the slowest link
+      paces a contention-free ring), so when OptCC's pipeline fill would
+      cost more - small p, shallow k, l close to 1 - staying on the ring
+      is the right call, and the calibrated optcc_time (within 10% of the
+      simulator, tests/test_schedule_time.py) makes the comparison
+      trustworthy at planning time. Ties go to the ring.
+    * ``"ring"`` plans the FIFO ring unconditionally - the mis-plan
+      fallback `replay` takes when a fault detector's estimate is not
+      credible enough to pick a straggler set from
+      (`repro.detect.estimate_usable`). The ring is valid under any
+      profile, including ones OptCC's closed form would degenerate on
+      (e.g. an estimate claiming p-1 stragglers).
+    * ``"optcc"`` plans the paper's schedule family unconditionally.
+    * any other registered name (``"hierarchical"``, ``"dbtree"``,
+      ``"torus2d"``, ...) plans that topology; its `lower_bound` /
+      `predicted_time` come from the registry entry's own bound and time
+      model. Raises ValueError for unknown names or unsupported profiles.
+
+    ``force_ring`` is the deprecated boolean this keyword replaced;
+    passing it (either value) emits a DeprecationWarning."""
+    if force_ring is not None:
+        warnings.warn(
+            "make_plan(force_ring=...) is deprecated; use "
+            "make_plan(algo='ring') instead of force_ring=True "
+            "(and algo='auto' instead of force_ring=False)",
+            DeprecationWarning, stacklevel=2)
+        if force_ring:
+            algo = "ring"
+    if algo in ("auto", "ring", "optcc"):
+        return _make_plan_classic(profile, n, k, fill_bubbles, materialize,
+                                  algo)
+    t_start = time.perf_counter()
+    entry = registry.get(algo)
+    if not entry.supports(profile):
+        raise ValueError(
+            f"algo {algo!r} does not support this profile "
+            f"(p={profile.p}, gpus_per_server={profile.gpus_per_server}); "
+            f"supported here: {', '.join(registry.supported(profile))}")
+    if materialize == "arrays":
+        gen = entry.generate_arrays or entry.generate
+        schedule = gen(profile, n, k, fill_bubbles)
+    elif materialize:
+        schedule = entry.generate(profile, n, k, fill_bubbles)
+    else:
+        schedule = None
+    gen_s = time.perf_counter() - t_start
+    plan_algo = schedule.meta["algo"] if schedule is not None else algo
+    return Plan(
+        profile=profile,
+        schedule=schedule,
+        algo=plan_algo,
+        lower_bound=entry.lower_bound(profile, n),
+        predicted_time=entry.time_model(profile, n, k),
+        t0=lb.t0_fault_free(profile.p, n, profile.gpus_per_server),
+        gen_seconds=gen_s,
+        descriptor={"algo": algo, "k": k},
+        topology=topology_of(plan_algo),
+    )
+
+
+def _make_plan_classic(profile: BandwidthProfile, n: int, k: int,
+                       fill_bubbles: bool, materialize: bool | str,
+                       algo: str) -> Plan:
+    """The OptCC-vs-ring planner (algo in auto/ring/optcc). Kept as one
+    inline path - not a loop over registry entries - so `algo="auto"` stays
+    bit-identical to the PR-6 planner; the registry's ring/optcc time
+    models mirror these expressions and tests/test_registry.py pins the
+    equality."""
     t_start = time.perf_counter()
     g = profile.gpus_per_server
     ells = [l for l in profile.slowdown if l > 1.0]
@@ -133,13 +210,14 @@ def make_plan(profile: BandwidthProfile, n: int, k: int = 16,
     if g > 1 and ells:
         ells = [max(ells)]
     ring_pred = max(profile.slowdown) * lb.t0_fault_free(profile.p, n, 1)
-    if force_ring:
+    if algo == "ring":
         optcc_pred = ring_pred
         use_ring = True
         descriptor = {"algo": "ring", "k": k}
     else:
         optcc_pred = lb.optcc_time(profile.p, n, ells, k, g)
-        use_ring = ring_pred <= optcc_pred  # healthy profiles tie -> ring
+        use_ring = (algo == "auto"
+                    and ring_pred <= optcc_pred)  # healthy ties -> ring
         descriptor = plan_descriptor(profile, n, k)
     if use_ring:
         descriptor["algo"] = "ring"
@@ -157,22 +235,23 @@ def make_plan(profile: BandwidthProfile, n: int, k: int = 16,
         schedule = None
     gen_s = time.perf_counter() - t_start
     if schedule is not None:
-        algo = schedule.meta["algo"]
+        plan_algo = schedule.meta["algo"]
     elif use_ring:
-        algo = "ring"
+        plan_algo = "ring"
     elif g > 1:
-        algo = "optcc-multigpu"
+        plan_algo = "optcc-multigpu"
     else:
-        algo = "optcc-single" if len(ells) == 1 else "optcc-multi"
+        plan_algo = "optcc-single" if len(ells) == 1 else "optcc-multi"
     return Plan(
         profile=profile,
         schedule=schedule,
-        algo=algo,
+        algo=plan_algo,
         lower_bound=lb.lower_bound(profile.p, n, ells, g),
         predicted_time=ring_pred if use_ring else optcc_pred,
         t0=lb.t0_fault_free(profile.p, n, g),
         gen_seconds=gen_s,
         descriptor=descriptor,
+        topology=topology_of(plan_algo),
     )
 
 
@@ -375,8 +454,9 @@ def replay(profile: BandwidthProfile, n: int, timeline: FaultTimeline,
             sim_tl = tl_cur
         else:
             from repro.detect import estimate_usable
-            plan_cur = make_plan(est_prof_cur, n_rem, k, fill_bubbles,
-                                 force_ring=not estimate_usable(est_prof_cur))
+            plan_cur = make_plan(
+                est_prof_cur, n_rem, k, fill_bubbles,
+                algo="auto" if estimate_usable(est_prof_cur) else "ring")
             # Mis-plan execution: the schedule was built for the estimated
             # rates, but the wire runs at the true ones. Events SET
             # absolute per-rank values, so t=0 corrections re-ground the

@@ -104,5 +104,5 @@ def ring_allreduce_schedule(profile: BandwidthProfile, n: int) -> Schedule:
     stage_ids[(p - 1) * p:p * p] = STAGE_ID["SELF"]
     stage_ids[p * p:] = STAGE_ID["AG"]
     return Schedule(profile=profile, n=n, nic_flows=flows,
-                    meta={"algo": "ring", "p": p, "vec_exact": True,
-                          "stage_ids": stage_ids})
+                    meta={"algo": "ring", "topology": "ring", "p": p,
+                          "vec_exact": True, "stage_ids": stage_ids})

@@ -262,7 +262,7 @@ def _optcc_single_slotted(profile: BandwidthProfile, n: int, k: int,
     if slot_release:
         flows = [dataclasses.replace(f, release=(f.pri or 0.0))
                  for f in flows]
-    meta = {"algo": "optcc-single", "k": k, "ell": ell,
+    meta = {"algo": "optcc-single", "topology": "optcc", "k": k, "ell": ell,
             "fill": fill, "slotted": True, "stage_ids": fl.stage_ids()}
     # For l <= 2 the body tiling is exactly collision-free, so forcing every
     # port to serve its flows strictly in (pri, fid) order (port_inorder: a
@@ -400,8 +400,9 @@ def _optcc_single_legacy(profile: BandwidthProfile, n: int, k: int,
                    stage="STAR")
 
     return Schedule(profile=profile, n=n, nic_flows=fl.nic,
-                    meta={"algo": "optcc-single", "k": k, "ell": ell,
-                          "fill": fill, "stage_ids": fl.stage_ids()})
+                    meta={"algo": "optcc-single", "topology": "optcc",
+                          "k": k, "ell": ell, "fill": fill,
+                          "stage_ids": fl.stage_ids()})
 
 
 # ----------------------------------------------------------------------------
@@ -470,8 +471,8 @@ def optcc_multi_schedule(profile: BandwidthProfile, n: int, k: int) -> Schedule:
                        lo, hi, Op.STORE, key, stage="S2")
 
     return Schedule(profile=profile, n=n, nic_flows=fl.nic,
-                    meta={"algo": "optcc-multi", "k": k, "m": m,
-                          "stage_ids": fl.stage_ids()})
+                    meta={"algo": "optcc-multi", "topology": "optcc",
+                          "k": k, "m": m, "stage_ids": fl.stage_ids()})
 
 
 # ----------------------------------------------------------------------------
@@ -617,8 +618,9 @@ def optcc_multi_gpu_schedule(profile: BandwidthProfile, n: int, k: int) -> Sched
 
     return Schedule(profile=profile, n=n, nic_flows=fl.nic,
                     nvlink_flows=fl.nv,
-                    meta={"algo": "optcc-multigpu", "k": k, "g": g,
-                          "ell": ell, "stage_ids": fl.stage_ids()})
+                    meta={"algo": "optcc-multigpu", "topology": "optcc",
+                          "k": k, "g": g, "ell": ell,
+                          "stage_ids": fl.stage_ids()})
 
 
 # ----------------------------------------------------------------------------

@@ -111,8 +111,8 @@ def ring_arrays(profile: BandwidthProfile, n: int) -> Schedule:
     stage_ids[(p - 1) * p: p * p] = STAGE_ID["SELF"]
     stage_ids[p * p:] = STAGE_ID["AG"]
     return Schedule(profile=profile, n=n, nic_flows=[], arrays=fa,
-                    meta={"algo": "ring", "p": p, "vec_exact": True,
-                          "stage_ids": stage_ids})
+                    meta={"algo": "ring", "topology": "ring", "p": p,
+                          "vec_exact": True, "stage_ids": stage_ids})
 
 
 def optcc_single_arrays(profile: BandwidthProfile, n: int, k: int,
@@ -266,7 +266,7 @@ def optcc_single_arrays(profile: BandwidthProfile, n: int, k: int,
     stage_ids[f3.ravel()] = STAGE_ID["S3"]
     stage_ids[fss.ravel()] = STAGE_ID["SELF"]
     stage_ids[f4.ravel()] = STAGE_ID["S4"]
-    meta = {"algo": "optcc-single", "k": k, "ell": ell,
+    meta = {"algo": "optcc-single", "topology": "optcc", "k": k, "ell": ell,
             "fill": fill, "slotted": True, "stage_ids": stage_ids}
     if ell <= 2:          # see _optcc_single_slotted for why l > 2 is greedy
         meta["port_inorder"] = True
@@ -367,7 +367,8 @@ def optcc_multi_arrays(profile: BandwidthProfile, n: int, k: int) -> Schedule:
     tmpl_stage[m + ph:m + 2 * ph - 1] = STAGE_ID["S4"]
     tmpl_stage[m + 2 * ph - 1:] = STAGE_ID["S2"]
     return Schedule(profile=profile, n=n, nic_flows=[], arrays=fa,
-                    meta={"algo": "optcc-multi", "k": k, "m": m,
+                    meta={"algo": "optcc-multi", "topology": "optcc",
+                          "k": k, "m": m,
                           "stage_ids": np.tile(tmpl_stage, nblk)})
 
 
@@ -574,8 +575,9 @@ def optcc_multi_gpu_arrays(profile: BandwidthProfile, n: int,
                     release=np.zeros(N), pri=np.full(N, np.nan),
                     nv=nv, dep_indptr=indptr, dep_indices=indices)
     return Schedule(profile=profile, n=n, nic_flows=[], arrays=fa,
-                    meta={"algo": "optcc-multigpu", "k": k, "g": g,
-                          "ell": ell, "stage_ids": stage_ids})
+                    meta={"algo": "optcc-multigpu", "topology": "optcc",
+                          "k": k, "g": g, "ell": ell,
+                          "stage_ids": stage_ids})
 
 
 def optcc_schedule_arrays(profile: BandwidthProfile, n: int, k: int = 16,

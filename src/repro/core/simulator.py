@@ -38,6 +38,7 @@ multi-GPU schedules, hand-built tests).
 from __future__ import annotations
 
 import heapq
+import os
 from concurrent.futures import ProcessPoolExecutor
 from concurrent.futures.process import BrokenProcessPool
 from typing import Callable, Iterable, Optional, Sequence
@@ -151,7 +152,14 @@ def simulate(schedule: Schedule, telemetry: bool = False,
     With ``telemetry=True`` the result additionally carries a
     `repro.obs.FlowTelemetry` (``result.telemetry``) derived from the same
     start/finish times - timings are identical either way.
+
+    With ``REPRO_DEBUG`` set in the environment, the schedule's meta is
+    checked against the documented key contract
+    (`model.validate_schedule_meta`) before simulating.
     """
+    if os.environ.get("REPRO_DEBUG"):
+        from repro.core.model import validate_schedule_meta
+        validate_schedule_meta(schedule)
     if schedule.meta.get("vec_exact"):
         from repro.core import flowvec
         res = flowvec.simulate_arrays(schedule, timeline=timeline)

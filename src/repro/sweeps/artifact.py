@@ -50,6 +50,24 @@ optcc-sweep/4 (vs /3):
     controller policy);
   * top-level ``retries`` records how many worker chunks the sweep engine
     had to re-run after a crash/hang (null = unknown, from older artifacts).
+
+optcc-sweep/5 (vs /4):
+  * topology-family scenarios (an explicitly requested registry algorithm,
+    `ScenarioSpec.algo != "auto"`) carry ``requested_algo``, ``t_auto``
+    (the makespan `make_plan(algo="auto")` achieves on the identical
+    profile) and ``overhead_vs_auto`` (= t_optcc / t_auto). For these rows
+    t_optcc is the requested topology's simulated makespan and lower_bound
+    its *per-topology* bound from the registry, so optcc_vs_lb scores the
+    topology against its own floor;
+  * ``summary.overall`` covers only planner-driven rows (no
+    ``requested_algo``): topology rows are deliberately suboptimal
+    baselines on profiles the planner would route elsewhere (a double
+    binary tree is ~log p slower than T0 by design), and folding them into
+    the overall percentiles would force loosening the tight regression
+    gates that protect the auto path. Topology rows are summarized in
+    ``summary.by_family.topology`` (gated via ``families.topology``) and
+    the new ``summary.by_algo`` block (topology records grouped by
+    requested algorithm, each adding ``overhead_vs_auto_p50/p99/max``).
 """
 from __future__ import annotations
 
@@ -63,7 +81,7 @@ __all__ = ["SCHEMA", "THRESHOLDS_SCHEMA", "percentile", "scenario_record",
            "build_artifact", "canonical_bytes", "write_artifact",
            "load_artifact", "validate_artifact", "check_thresholds"]
 
-SCHEMA = "optcc-sweep/4"
+SCHEMA = "optcc-sweep/5"
 THRESHOLDS_SCHEMA = "optcc-sweep-thresholds/1"
 
 _SCENARIO_REQUIRED = {
@@ -117,6 +135,13 @@ def scenario_record(r: ScenarioResult, deterministic: bool = False) -> dict:
         "gen_ms": None if deterministic else _round(r.gen_seconds * 1e3, 6),
         "sim_ms": None if deterministic else _round(r.sim_seconds * 1e3, 6),
     }
+    if r.t_auto is not None:
+        # Topology family: t_optcc above is the *requested* algorithm's
+        # makespan and lower_bound its per-topology floor; t_auto is what
+        # the planner's auto policy achieves on the identical profile.
+        rec["requested_algo"] = r.requested_algo
+        rec["t_auto"] = _round(r.t_auto)
+        rec["overhead_vs_auto"] = _round(r.overhead_vs_auto)
     if r.t_noreplan is not None:
         # Replay family: t_optcc above is the re-planning controller's
         # adopted makespan; these are the no-replan baseline (the initial
@@ -182,6 +207,12 @@ def _summarize(records: Sequence[dict], telemetry: bool = False) -> dict:
         out["overhead_noreplan_p50"] = _round(percentile(rep, 50))
         out["overhead_noreplan_p99"] = _round(percentile(rep, 99))
         out["overhead_noreplan_max"] = _round(max(rep))
+    aut = [r["overhead_vs_auto"] for r in records
+           if "overhead_vs_auto" in r]
+    if aut:
+        out["overhead_vs_auto_p50"] = _round(percentile(aut, 50))
+        out["overhead_vs_auto_p99"] = _round(percentile(aut, 99))
+        out["overhead_vs_auto_max"] = _round(max(aut))
     orc = [r["overhead_vs_oracle"] for r in records
            if "overhead_vs_oracle" in r]
     if orc:
@@ -204,8 +235,17 @@ def build_artifact(results: Sequence[ScenarioResult], profile: str,
                for r in results]
     families = sorted({r["family"] for r in records})
     policies = sorted({r["policy"] for r in records if "policy" in r})
+    algos = sorted({r["requested_algo"] for r in records
+                    if "requested_algo" in r})
+    # "overall" scores the planner-driven path only: topology rows request
+    # a specific algorithm regardless of fit (dbtree on a straggler profile
+    # is a deliberate baseline) and carry their own gates via
+    # families.topology / by_algo; mixing them in would blunt the tight
+    # overall regression thresholds. Degenerate topology-only grids keep a
+    # non-empty overall block by falling back to all records.
+    auto_records = [r for r in records if "requested_algo" not in r]
     summary = {
-        "overall": _summarize(records, telemetry),
+        "overall": _summarize(auto_records or records, telemetry),
         "by_family": {
             fam: _summarize([r for r in records if r["family"] == fam],
                             telemetry)
@@ -217,6 +257,12 @@ def build_artifact(results: Sequence[ScenarioResult], profile: str,
             pol: _summarize([r for r in records if r.get("policy") == pol],
                             telemetry)
             for pol in policies
+        }
+    if algos:
+        summary["by_algo"] = {
+            algo: _summarize([r for r in records
+                              if r.get("requested_algo") == algo], telemetry)
+            for algo in algos
         }
     return {
         "schema": SCHEMA,
@@ -281,8 +327,16 @@ def _migrate_v3(obj: dict) -> dict:
     """optcc-sweep/3 -> /4: detection fields are additive (a v3 artifact
     predates the detection family), but the engine's retry count was not
     recorded - null marks it unknown rather than claiming a clean 0."""
-    obj["schema"] = SCHEMA
+    obj["schema"] = "optcc-sweep/4"
     obj["retries"] = None
+    return obj
+
+
+def _migrate_v4(obj: dict) -> dict:
+    """optcc-sweep/4 -> /5: purely additive (topology fields are optional
+    and a v4 artifact predates the topology family; its overall summary
+    already covers only planner-driven rows), so only the tag moves."""
+    obj["schema"] = SCHEMA
     return obj
 
 
@@ -298,6 +352,8 @@ def load_artifact(path: str) -> dict:
         obj = _migrate_v2(obj)
     if obj.get("schema") == "optcc-sweep/3":
         obj = _migrate_v3(obj)
+    if obj.get("schema") == "optcc-sweep/4":
+        obj = _migrate_v4(obj)
     return obj
 
 
@@ -393,6 +449,18 @@ def validate_artifact(artifact: dict) -> list[str]:
                     errs.append(f"{rec['name']}.{key} not numeric or null")
         elif "policy" in rec:
             errs.append(f"{rec['name']}: policy on a non-detection scenario")
+        if rec["family"] == "topology":
+            if not isinstance(rec.get("requested_algo"), str):
+                errs.append(f"{rec['name']}: topology scenario lacks "
+                            f"requested_algo")
+            if not isinstance(rec.get("t_auto"), (int, float)):
+                errs.append(f"{rec['name']}: topology scenario lacks t_auto")
+            elif not isinstance(rec.get("overhead_vs_auto"), (int, float)):
+                errs.append(f"{rec['name']}: topology scenario lacks "
+                            f"overhead_vs_auto")
+        elif "t_auto" in rec or "requested_algo" in rec:
+            errs.append(f"{rec['name']}: topology fields on a non-topology "
+                        f"scenario")
         sb = rec.get("stage_breakdown")
         if telemetry:
             # The tentpole invariant, enforced on every telemetry artifact:
@@ -419,9 +487,14 @@ def validate_artifact(artifact: dict) -> list[str]:
             and "by_policy" not in summary:
         errs.append("artifact has detection scenarios but no "
                     "summary.by_policy block")
+    if any("requested_algo" in rec for rec in scenarios) \
+            and "by_algo" not in summary:
+        errs.append("artifact has topology scenarios but no "
+                    "summary.by_algo block")
     for group, stats in [("overall", summary.get("overall", {}))] + \
             sorted(summary.get("by_family", {}).items()) + \
-            sorted(summary.get("by_policy", {}).items()):
+            sorted(summary.get("by_policy", {}).items()) + \
+            sorted(summary.get("by_algo", {}).items()):
         for key in _SUMMARY_KEYS:
             if key not in stats:
                 errs.append(f"summary[{group}] missing {key!r}")

@@ -55,6 +55,15 @@ class ScenarioResult:
     # for replay scenarios the breakdown sums to t_noreplan, not t_optcc.
     t_noreplan: Optional[float] = None
     replans: Optional[int] = None
+    # Topology-family fields (spec.algo != "auto"). The scenario plans the
+    # *explicitly requested* registry algorithm - t_optcc is its simulated
+    # makespan and lower_bound its per-topology bound - and additionally
+    # simulates what make_plan(algo="auto") would have run on the very same
+    # profile, so overhead_vs_auto prices the topology against the planner's
+    # choice (>1: auto was right to avoid it; <1: the time models leave
+    # wins on the table).
+    requested_algo: Optional[str] = None
+    t_auto: Optional[float] = None
     # Detection-family fields (spec.detection non-empty). t_optcc is the
     # *imperfect* controller's adopted makespan; t_oracle the PR-8
     # zero-delay perfect-knowledge controller's on the same timeline, so
@@ -87,6 +96,11 @@ class ScenarioResult:
         return None if self.t_oracle is None else self.t_optcc / self.t_oracle
 
     @property
+    def overhead_vs_auto(self) -> Optional[float]:
+        """Requested topology vs the planner's auto pick, same profile."""
+        return None if self.t_auto is None else self.t_optcc / self.t_auto
+
+    @property
     def overhead_lb(self) -> float:
         """Unavoidable overhead: no algorithm can beat this."""
         return self.lower_bound / self.t0
@@ -112,10 +126,18 @@ def run_scenario(spec: ScenarioSpec,
     time-varying path instead: t_optcc is the makespan the mid-flight
     re-planning controller achieves, and the original plan ridden through
     the whole timeline lands in t_noreplan.
+
+    Specs naming an explicit algorithm (`spec.algo != "auto"`, the topology
+    family) plan that registry entry instead of letting the planner choose,
+    and score it against both its per-topology lower bound and the auto
+    pick on the same profile (`t_auto` / overhead_vs_auto).
     """
     if spec.events:
         return _run_replay_scenario(spec, measure_latency=measure_latency,
                                     telemetry=telemetry)
+    if spec.algo != "auto":
+        return _run_topology_scenario(spec, measure_latency=measure_latency,
+                                      telemetry=telemetry)
     profile = spec.profile()
     plan = make_plan(profile, spec.n, k=spec.k,
                      fill_bubbles=spec.fill_bubbles, materialize="arrays")
@@ -149,6 +171,49 @@ def run_scenario(spec: ScenarioSpec,
         sim_seconds=sim_seconds if measure_latency else 0.0,
         ring_sim_seconds=ring_sim_seconds if measure_latency else 0.0,
         stage_breakdown=stage_breakdown,
+    )
+
+
+def _run_topology_scenario(spec: ScenarioSpec,
+                           measure_latency: bool = True,
+                           telemetry: bool = False) -> ScenarioResult:
+    """Topology-family scenario: plan the explicitly requested registry
+    algorithm (hierarchical / dbtree / torus2d / ...), simulate it, and
+    score it twice - against its *own* per-topology lower bound (the
+    optcc_vs_lb column, gated per-family in CI) and against the makespan
+    `make_plan(algo="auto")` achieves on the identical profile (t_auto, so
+    overhead_vs_auto says what explicitly requesting this topology costs or
+    saves vs trusting the planner)."""
+    profile = spec.profile()
+    plan = make_plan(profile, spec.n, k=spec.k,
+                     fill_bubbles=spec.fill_bubbles, materialize=True,
+                     algo=spec.algo)
+    t_sim0 = time.perf_counter()
+    res = simulate(plan.schedule)
+    t_topo = res.makespan
+    sim_seconds = time.perf_counter() - t_sim0
+    stage_breakdown = None
+    if telemetry:
+        from repro import obs
+        stage_breakdown = obs.stage_breakdown(obs.collect(plan.schedule, res))
+    auto_plan = make_plan(profile, spec.n, k=spec.k,
+                          fill_bubbles=spec.fill_bubbles,
+                          materialize="arrays")
+    t_auto = simulate(auto_plan.schedule).makespan
+    return ScenarioResult(
+        spec=spec,
+        algo=plan.algo,
+        t_optcc=t_topo,
+        t_ring=None,
+        t_predicted=plan.predicted_time,
+        lower_bound=plan.lower_bound,
+        t0=plan.t0,
+        num_flows=plan.schedule.num_flows,
+        gen_seconds=plan.gen_seconds if measure_latency else 0.0,
+        sim_seconds=sim_seconds if measure_latency else 0.0,
+        stage_breakdown=stage_breakdown,
+        requested_algo=spec.algo,
+        t_auto=t_auto,
     )
 
 

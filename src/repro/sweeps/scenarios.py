@@ -19,7 +19,11 @@ families:
                 recoveries) replayed through the simulator with mid-flight
                 re-planning, from deterministic trace-shaped generators
                 modeled on the Alibaba-GPU-2020 / AcmeTrace fault catalogs
-                (PAPERS.md) plus miniature checked-in traces in ci/traces/.
+                (PAPERS.md) plus miniature checked-in traces in ci/traces/;
+  topology    - the registry schedules beyond ring/optcc (hierarchical,
+                dbtree, torus2d) under healthy and degraded profiles, each
+                scored against its own per-topology lower bound and against
+                whatever `make_plan(algo="auto")` would have planned.
 
 Grids are deterministic: the same (profile, seed) always yields the same
 scenario list, which is what makes the sweep artifact reproducible and
@@ -67,6 +71,10 @@ class ScenarioSpec:
     # time-valued ones (probe_interval, latency, backoff_base) are in T0
     # units like `events` and are rescaled by the engine.
     detection: tuple[tuple[str, object], ...] = ()
+    # Schedule-registry algorithm to plan ("auto" = the planner's OptCC-vs-
+    # ring choice, the historical behavior). Non-"auto" scenarios (the
+    # topology family) are additionally scored against the auto plan.
+    algo: str = "auto"
 
     @property
     def policy(self) -> Optional[str]:
@@ -445,6 +453,52 @@ def gen_detection(ps: Sequence[int], ks: Sequence[int],
                                     events=events, detection=det)
 
 
+def gen_topology(ps: Sequence[int] = (8, 16), ks: Sequence[int] = (12,),
+                 ells: Sequence[float] = (1.6, 2.0, 4.0),
+                 hier_gs: Sequence[int] = (2, 4),
+                 hier_qs: Sequence[int] = (4, 8),
+                 hier_ells: Sequence[float] = (2.0, 4.0)
+                 ) -> Iterator[ScenarioSpec]:
+    """Topology family: every registry schedule beyond ring/optcc, under
+    healthy and straggler profiles. dbtree/torus2d run on flat (g=1)
+    clusters with a mid-ring straggler; hierarchical runs on multi-GPU
+    servers with server 0 degraded (PXN: all its NICs slow). The engine
+    also plans `algo="auto"` on the same profile, so each scenario is
+    scored both against its own lower bound (optcc_vs_lb) and against the
+    planner's choice (overhead_vs_auto). Fully deterministic - no rng."""
+    for algo in ("dbtree", "torus2d"):
+        for p in ps:
+            for k in ks:
+                n = _seg_n(p, k)
+                yield ScenarioSpec(name=f"topo_{algo}_healthy_p{p}_k{k}",
+                                   family="topology", p=p, n=n, k=k,
+                                   slowdown=(1.0,) * p,
+                                   simulate_ring=False, algo=algo)
+                for ell in ells:
+                    yield ScenarioSpec(
+                        name=f"topo_{algo}_single_p{p}_k{k}_l{ell:g}",
+                        family="topology", p=p, n=n, k=k,
+                        slowdown=_slowdown(p, {p // 2: ell}),
+                        simulate_ring=False, algo=algo)
+    for g in hier_gs:
+        for q in hier_qs:
+            p = g * q
+            for k in ks:
+                n = _seg_n(p, k, g)
+                yield ScenarioSpec(
+                    name=f"topo_hier_healthy_g{g}_q{q}_k{k}",
+                    family="topology", p=p, n=n, k=k,
+                    slowdown=(1.0,) * p, gpus_per_server=g,
+                    simulate_ring=False, algo="hierarchical")
+                for ell in hier_ells:
+                    yield ScenarioSpec(
+                        name=f"topo_hier_g{g}_q{q}_k{k}_l{ell:g}",
+                        family="topology", p=p, n=n, k=k,
+                        slowdown=_slowdown(p, {r: ell for r in range(g)}),
+                        gpus_per_server=g,
+                        simulate_ring=False, algo="hierarchical")
+
+
 # ----------------------------------------------------------------------------
 # named grids
 # ----------------------------------------------------------------------------
@@ -472,6 +526,7 @@ def smoke_grid(seed: int = 0) -> list[ScenarioSpec]:
                                      rng=rng)
     specs += gen_replay(ps=(8, 16), ks=(12,))
     specs += gen_detection(ps=(8,), ks=(12,))
+    specs += gen_topology()
     return _dedup(specs)
 
 
@@ -510,6 +565,8 @@ def full_grid(seed: int = 0) -> list[ScenarioSpec]:
                            probe_intervals=(0.01, 0.03, 0.08),
                            noises=(0.0, 0.15, 0.3),
                            fpfns=((0.0, 0.0), (0.02, 0.05), (0.08, 0.1)))
+    specs += gen_topology(ps=(8, 16, 32, 64), ks=(4, 12),
+                          hier_gs=(2, 4, 8), hier_qs=(4, 8, 16))
     return _dedup(specs)
 
 
@@ -521,7 +578,7 @@ def _dedup(specs: Sequence[ScenarioSpec]) -> list[ScenarioSpec]:
     out = []
     for s in specs:
         key = (s.p, s.n, s.k, s.slowdown, s.gpus_per_server, s.nvlink_mult,
-               s.fill_bubbles, s.events, s.detection)
+               s.fill_bubbles, s.events, s.detection, s.algo)
         if key in seen:
             continue
         seen.add(key)

@@ -264,7 +264,7 @@ def test_unusable_estimate_forces_ring_fallback():
         BandwidthProfile(P, tuple([4.0] * (P - 1) + [1.0])))
     assert estimate_usable(BandwidthProfile.single_straggler(P, 4.0))
     plan = make_plan(BandwidthProfile.single_straggler(P, 4.0), N, k=K,
-                     force_ring=True)
+                     algo="ring")
     assert plan.algo == "ring"
 
 

@@ -228,8 +228,8 @@ def test_v1_artifact_migration(tmp_path):
     path = tmp_path / "v1.json"
     write_artifact(art, str(path))
     migrated = load_artifact(str(path))
-    # v1 chains through v2 and v3 up to the current schema.
-    assert migrated["schema"] == "optcc-sweep/4"
+    # v1 chains through v2, v3 and v4 up to the current schema.
+    assert migrated["schema"] == "optcc-sweep/5"
     assert migrated["telemetry"] is False
     assert migrated["retries"] is None
     assert migrated["scenarios"][0]["gen_ms"] is None

@@ -13,10 +13,10 @@ import pytest
 pytest.importorskip("hypothesis", reason="property tests need the hypothesis extra")
 from hypothesis import given, settings, strategies as st  # noqa: E402
 
-from repro.core import (BandwidthProfile, optcc_schedule, simulate,
-                        verify_allreduce)
+from repro.core import BandwidthProfile, simulate, verify_allreduce
 from repro.core import lower_bounds as lb
 from repro.core.ring import split_points
+from repro.core.schedule import optcc_schedule
 
 SMALL = dict(max_examples=25, deadline=None)
 

@@ -1,0 +1,233 @@
+"""Schedule registry + unified planner API (`make_plan(algo=...)`).
+
+Contracts pinned here:
+  1. Round-trip: every registered algorithm, on every profile it supports,
+     generates a schedule that (a) computes a correct AllReduce at the data
+     level, (b) simulates identically under the fast path and the scalar
+     reference event loop, (c) finishes at or above the entry's own lower
+     bound, and (d) carries the documented Schedule.meta key contract.
+  2. `make_plan(algo="auto")` reproduces the historical OptCC-vs-ring
+     planner choice (the PR-6 formula) on the static smoke grid, and the
+     registry's ring/optcc time models equal the classic expressions.
+  3. Deprecation shims: `force_ring=` and the old generator imports from
+     `repro.core` keep working but warn.
+"""
+import warnings
+
+import numpy as np
+import pytest
+
+from repro.core import (BandwidthProfile, make_plan, registry, simulate,
+                        validate_schedule_meta, verify_allreduce)
+from repro.core import lower_bounds as lb
+from repro.core.planner import topology_of
+from repro.core.registry import ScheduleAlgo
+from repro.core.simulator import simulate_reference
+
+RNG = np.random.default_rng(7)
+
+# One profile pool covering every regime an entry may support: flat g=1,
+# single/multi stragglers, composite and 2-D-factorable p, and multi-GPU
+# servers (healthy + one degraded server).
+PROFILES = [
+    BandwidthProfile.healthy(8),
+    BandwidthProfile.healthy(12),
+    BandwidthProfile.single_straggler(8, 2.0, straggler=3),
+    BandwidthProfile.single_straggler(16, 1.5, straggler=7),
+    BandwidthProfile.multi_straggler(12, [1.5, 2.5]),
+    BandwidthProfile.healthy(8, g=2),
+    # straggler is a *server* index when g > 1
+    BandwidthProfile.single_straggler(16, 2.0, straggler=1, g=4),
+    BandwidthProfile.single_straggler(16, 4.0, straggler=4, g=2),
+]
+
+
+def _n_for(profile, k):
+    g = profile.gpus_per_server
+    units = max(profile.p // g - 1, 1)
+    return g * k * units * 8
+
+
+# ----------------------------------------------------------------------------
+# registry API
+# ----------------------------------------------------------------------------
+
+def test_registry_names_and_lookup():
+    assert set(registry.names()) >= {"ring", "optcc", "hierarchical",
+                                     "dbtree", "torus2d"}
+    with pytest.raises(ValueError, match="unknown schedule algo"):
+        registry.get("nope")
+    with pytest.raises(ValueError, match="already registered"):
+        registry.register(ScheduleAlgo(
+            name="ring", description="dup", generate=lambda *a: None,
+            time_model=lambda *a: 0.0, lower_bound=lambda *a: 0.0))
+
+
+def test_supported_filters_by_profile():
+    flat = registry.supported(BandwidthProfile.healthy(8))
+    assert "dbtree" in flat and "torus2d" in flat
+    assert "hierarchical" not in flat           # needs g >= 2
+    multi = registry.supported(BandwidthProfile.healthy(8, g=2))
+    assert "hierarchical" in multi
+    assert "dbtree" not in multi and "torus2d" not in multi
+    prime = registry.supported(BandwidthProfile.healthy(7))
+    assert "torus2d" not in prime               # no 2-D factorization
+    assert {"ring", "optcc"} <= set(prime)
+
+
+def test_auto_candidates_are_the_classic_pair():
+    assert {a.name for a in registry.auto_candidates()} == {"ring", "optcc"}
+
+
+# ----------------------------------------------------------------------------
+# round-trip: every registered name x every supported profile
+# ----------------------------------------------------------------------------
+
+@pytest.mark.parametrize("name", registry.names())
+def test_registry_round_trip(name):
+    checked = 0
+    for profile in PROFILES:
+        if not registry.get(name).supports(profile):
+            continue
+        k = 4
+        n = _n_for(profile, k)
+        plan = make_plan(profile, n, k=k, algo=name)
+        sched = plan.schedule
+        validate_schedule_meta(sched)
+        assert sched.meta["topology"] == topology_of(sched.meta["algo"])
+        assert plan.topology == sched.meta["topology"]
+        x = RNG.standard_normal((profile.p, n))
+        verify_allreduce(sched, x)
+        t_fast = simulate(sched).makespan
+        t_ref = simulate_reference(sched).makespan
+        assert t_fast == pytest.approx(t_ref, rel=1e-12), (name, profile.p)
+        assert t_fast >= plan.lower_bound * (1 - 1e-9), (name, profile.p)
+        assert plan.lower_bound == pytest.approx(
+            registry.get(name).lower_bound(profile, n))
+        checked += 1
+    assert checked >= 2, f"profile pool never exercised {name}"
+
+
+def test_unsupported_algo_raises():
+    with pytest.raises(ValueError, match="does not support"):
+        make_plan(BandwidthProfile.healthy(8), 640, k=4, algo="hierarchical")
+    with pytest.raises(ValueError, match="does not support"):
+        make_plan(BandwidthProfile.healthy(7), 630, k=3, algo="torus2d")
+    with pytest.raises(ValueError, match="unknown schedule algo"):
+        make_plan(BandwidthProfile.healthy(8), 640, k=4, algo="bogus")
+
+
+# ----------------------------------------------------------------------------
+# auto == the historical OptCC-vs-ring planner (the PR-6 pin)
+# ----------------------------------------------------------------------------
+
+def _classic_choice(profile, n, k):
+    """The pre-registry planner formula, verbatim."""
+    g = profile.gpus_per_server
+    ells = [l for l in profile.slowdown if l > 1.0]
+    if g > 1 and ells:
+        ells = [max(ells)]
+    ring_pred = max(profile.slowdown) * lb.t0_fault_free(profile.p, n, 1)
+    optcc_pred = lb.optcc_time(profile.p, n, ells, k, g)
+    return ring_pred <= optcc_pred, ring_pred, optcc_pred
+
+
+def test_auto_matches_classic_choice_on_smoke_grid():
+    from repro.sweeps.scenarios import smoke_grid
+    static = [s for s in smoke_grid(seed=0)
+              if not s.events and s.algo == "auto"][::5]
+    assert len(static) >= 30
+    for s in static:
+        profile = s.profile()
+        use_ring, ring_pred, optcc_pred = _classic_choice(profile, s.n, s.k)
+        plan = make_plan(profile, s.n, k=s.k, fill_bubbles=s.fill_bubbles,
+                         materialize="arrays")
+        if use_ring:
+            assert plan.algo == "ring", s.name
+            assert plan.predicted_time == ring_pred, s.name
+        else:
+            assert plan.algo.startswith("optcc"), s.name
+            assert plan.predicted_time == optcc_pred, s.name
+
+
+def test_registry_time_models_mirror_classic_formulas():
+    for profile in PROFILES:
+        for n, k in ((_n_for(profile, 4), 4), (_n_for(profile, 16), 16)):
+            _, ring_pred, optcc_pred = _classic_choice(profile, n, k)
+            assert registry.get("ring").time_model(profile, n, k) == ring_pred
+            assert registry.get("optcc").time_model(profile, n, k) == \
+                optcc_pred
+
+
+def test_explicit_ring_and_optcc_match_direct_generators():
+    profile = BandwidthProfile.single_straggler(8, 1.5)
+    n, k = 7 * 4 * 16, 4
+    from repro.core.ring import ring_allreduce_schedule
+    from repro.core.schedule import optcc_schedule
+    ring_plan = make_plan(profile, n, k=k, algo="ring")
+    assert simulate(ring_plan.schedule).makespan == \
+        simulate(ring_allreduce_schedule(profile, n)).makespan
+    optcc_plan = make_plan(profile, n, k=k, algo="optcc")
+    assert simulate(optcc_plan.schedule).makespan == \
+        simulate(optcc_schedule(profile, n, k)).makespan
+
+
+# ----------------------------------------------------------------------------
+# deprecation shims
+# ----------------------------------------------------------------------------
+
+def test_force_ring_shim_warns_and_works():
+    # ell=4 at k=16 makes auto pick OptCC, so the shim values are
+    # discernible (at shallow k the pipeline ramp keeps auto on the ring).
+    profile = BandwidthProfile.single_straggler(8, 4.0)
+    with pytest.warns(DeprecationWarning, match="force_ring"):
+        plan = make_plan(profile, 560, k=16, force_ring=True)
+    assert plan.algo == "ring"
+    with pytest.warns(DeprecationWarning, match="force_ring"):
+        plan = make_plan(profile, 560, k=16, force_ring=False)
+    assert plan.algo.startswith("optcc")    # force_ring=False meant "auto"
+
+
+def test_deprecated_core_imports_warn():
+    import importlib
+
+    import repro.core as core
+    for name in ("optcc_schedule", "ring_allreduce_schedule",
+                 "optcc_single_schedule"):
+        with pytest.warns(DeprecationWarning, match=name):
+            fn = getattr(core, name)
+        assert callable(fn)
+    # __all__ still advertises them, and the canonical modules stay quiet.
+    assert "optcc_schedule" in core.__all__
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")
+        importlib.import_module("repro.core.schedule").optcc_schedule
+        importlib.import_module("repro.core.ring").ring_allreduce_schedule
+
+
+# ----------------------------------------------------------------------------
+# Schedule.meta contract + debug validator
+# ----------------------------------------------------------------------------
+
+def test_meta_validator_rejects_broken_meta():
+    profile = BandwidthProfile.single_straggler(8, 1.5)
+    sched = make_plan(profile, 560, k=4, algo="optcc").schedule
+    good = dict(sched.meta)
+    sched.meta.pop("topology")
+    with pytest.raises(ValueError, match="topology"):
+        validate_schedule_meta(sched)
+    sched.meta.update(good)
+    sched.meta["stage_ids"] = sched.meta["stage_ids"][:-1]
+    with pytest.raises(ValueError, match="stage_ids"):
+        validate_schedule_meta(sched)
+    sched.meta.update(good)
+
+
+def test_debug_mode_validates_meta(monkeypatch):
+    profile = BandwidthProfile.single_straggler(8, 1.5)
+    sched = make_plan(profile, 560, k=4, algo="optcc").schedule
+    monkeypatch.setenv("REPRO_DEBUG", "1")
+    simulate(sched)                           # valid meta passes
+    del sched.meta["algo"]
+    with pytest.raises(ValueError, match="algo"):
+        simulate(sched)

@@ -4,15 +4,18 @@ The executor moves real numpy payloads through the exact flow graph the
 simulator times; a schedule passes iff every rank ends with sum_i x_i.
 Covers ring (healthy + degraded), OptCC single straggler (both the exact
 slotted generator and the legacy pattern-alternating one, with and without
-bubble filling), multi-straggler, and multi-GPU/server schedules.
+bubble filling), multi-straggler, and multi-GPU/server schedules - plus
+every algorithm in `core.registry`, driven through the registry itself so
+a newly registered topology is covered without touching this file.
 """
 import numpy as np
 import pytest
 
-from repro.core import (BandwidthProfile, optcc_schedule,
-                        ring_allreduce_schedule, verify_allreduce)
+from repro.core import BandwidthProfile, make_plan, registry, verify_allreduce
+from repro.core.ring import ring_allreduce_schedule
 from repro.core.schedule import (optcc_multi_gpu_schedule,
-                                 optcc_multi_schedule, optcc_single_schedule)
+                                 optcc_multi_schedule, optcc_schedule,
+                                 optcc_single_schedule)
 
 RNG = np.random.default_rng(42)
 
@@ -117,6 +120,35 @@ def test_dispatcher_selects_variants():
     s = optcc_schedule(
         BandwidthProfile.single_straggler(8, 2.0, g=2), n, k)
     assert s.meta["algo"] == "optcc-multigpu"
+
+
+# Every profile regime a registry entry may claim to support; each entry is
+# exercised on each profile it supports (p=12 factors as 3x4 for torus2d).
+REGISTRY_PROFILES = [
+    BandwidthProfile.healthy(12),
+    BandwidthProfile.single_straggler(12, 2.0, straggler=5),
+    BandwidthProfile.multi_straggler(12, [1.5, 3.0]),
+    BandwidthProfile.healthy(12, g=3),
+    BandwidthProfile.single_straggler(12, 2.0, straggler=1, g=3),
+]
+
+
+@pytest.mark.parametrize("name", registry.names())
+def test_every_registered_algo_correct(name):
+    """Registry-driven: each registered algorithm computes a full AllReduce
+    on every supported profile - no per-algorithm special cases."""
+    entry = registry.get(name)
+    checked = 0
+    for prof in REGISTRY_PROFILES:
+        if not entry.supports(prof):
+            continue
+        k = 4
+        g = prof.gpus_per_server
+        n = g * k * max(prof.p // g - 1, 1) * 6 + 5      # ragged on purpose
+        plan = make_plan(prof, n, k=k, algo=name)
+        verify_allreduce(plan.schedule, rand_x(prof.p, n))
+        checked += 1
+    assert checked, f"no profile in the pool exercises {name!r}"
 
 
 def test_executor_rejects_nontopological():

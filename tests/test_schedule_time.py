@@ -16,9 +16,10 @@ import dataclasses
 
 import pytest
 
-from repro.core import (BandwidthProfile, optcc_schedule,
-                        ring_allreduce_schedule, simulate)
+from repro.core import BandwidthProfile, simulate
 from repro.core import lower_bounds as lb
+from repro.core.ring import ring_allreduce_schedule
+from repro.core.schedule import optcc_schedule
 
 
 def sim_time(profile, n, k=None, **kw):

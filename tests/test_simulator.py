@@ -107,7 +107,7 @@ def test_deadlock_detection():
 
 def test_determinism():
     """Same schedule -> identical result (paper: SimAI is deterministic)."""
-    from repro.core import optcc_schedule
+    from repro.core.schedule import optcc_schedule
     prof = BandwidthProfile.single_straggler(8, 1.5)
     s = optcc_schedule(prof, 7 * 8 * 16, 8)
     r1, r2 = simulate(s), simulate(s)
@@ -116,7 +116,8 @@ def test_determinism():
 
 
 def test_simulate_many_matches_simulate():
-    from repro.core import optcc_schedule, ring_allreduce_schedule
+    from repro.core.ring import ring_allreduce_schedule
+    from repro.core.schedule import optcc_schedule
     scheds = [
         optcc_schedule(BandwidthProfile.single_straggler(8, 1.5), 7 * 8 * 16, 8),
         ring_allreduce_schedule(BandwidthProfile.healthy(8), 800),

@@ -45,19 +45,20 @@ def test_smoke_grid_size_and_diversity():
     assert len(specs) >= 200
     fams = {s.family for s in specs}
     assert {"healthy", "single", "multi", "multigpu", "correlated",
-            "replay", "detection"} <= fams
+            "replay", "detection", "topology"} <= fams
     # Distinct scenarios: no two specs share the same physical setup
     # (replay specs differ by their failure timeline, detection specs by
-    # their detector/controller parameters too).
+    # their detector/controller parameters, topology specs by the
+    # explicitly requested algorithm too).
     keys = {(s.p, s.n, s.k, s.slowdown, s.gpus_per_server, s.nvlink_mult,
-             s.events, s.detection)
+             s.events, s.detection, s.algo)
             for s in specs}
     assert len(keys) == len(specs)
     # The nightly grid keeps every family too (dedup must not fold the
     # correlated-fault block into multigpu).
     full_fams = {s.family for s in full_grid(seed=0)}
     assert {"healthy", "single", "multi", "multigpu", "correlated",
-            "replay", "detection"} <= full_fams
+            "replay", "detection", "topology"} <= full_fams
 
 
 def test_heterogeneous_ells_present():
@@ -166,8 +167,43 @@ def test_percentile():
     assert percentile(xs, 0) == 1 and percentile(xs, 100) == 100
 
 
+def test_topology_rows_scored_and_excluded_from_overall(sub_artifact):
+    """Topology rows carry requested_algo/t_auto/overhead_vs_auto, feed
+    summary.by_algo, and are excluded from summary.overall (they are
+    deliberately suboptimal baselines; optcc-sweep/5 docstring)."""
+    topo = [r for r in sub_artifact["scenarios"]
+            if r["family"] == "topology"]
+    assert topo                              # the sub-grid kept the family
+    for r in topo:
+        assert r["requested_algo"] in ("hierarchical", "dbtree", "torus2d")
+        assert r["t_auto"] > 0
+        assert r["overhead_vs_auto"] == pytest.approx(
+            r["t_optcc"] / r["t_auto"])
+    assert set(sub_artifact["summary"]["by_algo"]) == \
+        {r["requested_algo"] for r in topo}
+    n_auto = len(sub_artifact["scenarios"]) - len(topo)
+    assert sub_artifact["summary"]["overall"]["count"] == n_auto
+    fam_stats = sub_artifact["summary"]["by_family"]["topology"]
+    assert fam_stats["count"] == len(topo)
+    assert "overhead_vs_auto_p99" in fam_stats
+
+
+def test_validate_catches_topology_corruption(sub_artifact):
+    bad = copy.deepcopy(sub_artifact)
+    topo = next(r for r in bad["scenarios"] if r["family"] == "topology")
+    del topo["t_auto"]
+    assert any("t_auto" in e for e in validate_artifact(bad))
+    bad = copy.deepcopy(sub_artifact)
+    other = next(r for r in bad["scenarios"] if r["family"] != "topology")
+    other["t_auto"] = 1.0
+    assert any("non-topology" in e for e in validate_artifact(bad))
+    bad = copy.deepcopy(sub_artifact)
+    del bad["summary"]["by_algo"]
+    assert any("by_algo" in e for e in validate_artifact(bad))
+
+
 # ----------------------------------------------------------------------------
-# schema migration chain (v1 -> v2 -> v3 -> v4)
+# schema migration chain (v1 -> v2 -> v3 -> v4 -> v5)
 # ----------------------------------------------------------------------------
 
 def _v1_artifact(deterministic: bool = True) -> dict:
@@ -246,10 +282,16 @@ def test_migration_v1_missing_optional_keys(tmp_path):
     assert validate_artifact(got) == []
 
 
-def test_migration_v3_to_v4(tmp_path, sub_artifact):
+def test_migration_v3_to_current(tmp_path, sub_artifact):
+    # A v3 artifact predates both the retry counter and the topology
+    # family: strip them and walk the whole v3 -> v4 -> v5 chain.
     obj = copy.deepcopy(sub_artifact)
     obj["schema"] = "optcc-sweep/3"
     del obj["retries"]
+    obj["scenarios"] = [r for r in obj["scenarios"]
+                        if r["family"] != "topology"]
+    obj["scenario_count"] = len(obj["scenarios"])
+    del obj["summary"]["by_algo"]
     got = _load_from(tmp_path, obj)
     assert got["schema"] == SCHEMA
     assert got["retries"] is None
@@ -257,6 +299,21 @@ def test_migration_v3_to_v4(tmp_path, sub_artifact):
     # A current artifact round-trips untouched: retries stays 0.
     got2 = _load_from(tmp_path, sub_artifact)
     assert got2["retries"] == 0
+
+
+def test_migration_v4_to_v5(tmp_path, sub_artifact):
+    """v4 -> v5 is additive: a v4 artifact (no topology rows, no by_algo)
+    migrates to a valid v5 artifact with only the tag moving."""
+    obj = copy.deepcopy(sub_artifact)
+    obj["schema"] = "optcc-sweep/4"
+    obj["scenarios"] = [r for r in obj["scenarios"]
+                        if r["family"] != "topology"]
+    obj["scenario_count"] = len(obj["scenarios"])
+    del obj["summary"]["by_algo"]
+    got = _load_from(tmp_path, obj)
+    assert got["schema"] == SCHEMA
+    assert validate_artifact(got) == []
+    assert "by_algo" not in got["summary"]
 
 
 # ----------------------------------------------------------------------------

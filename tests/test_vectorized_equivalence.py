@@ -24,9 +24,10 @@ import random
 import numpy as np
 import pytest
 
-from repro.core import (BandwidthProfile, optcc_schedule,
-                        ring_allreduce_schedule, simulate)
+from repro.core import BandwidthProfile, simulate
 from repro.core.flowvec import FlowArrays
+from repro.core.ring import ring_allreduce_schedule
+from repro.core.schedule import optcc_schedule
 from repro.core.schedule_vec import optcc_schedule_arrays, ring_arrays
 from repro.core.simulator import simulate_reference
 
